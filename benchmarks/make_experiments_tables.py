@@ -1,0 +1,48 @@
+"""Render the EXPERIMENTS.md dry-run/roofline tables from the sweep JSON.
+
+    PYTHONPATH=src python benchmarks/make_experiments_tables.py
+"""
+import json
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(seconds: float) -> str:
+    if seconds >= 1.0:
+        return f"{seconds:.2f} s"
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:.1f} ms"
+    return f"{seconds * 1e6:.0f} µs"
+
+
+def main(path="benchmarks/results/dryrun_baseline.json",
+         mesh="16x16"):
+    d = json.load(open(path))
+    rows = [r for r in d["results"] if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    print("| arch | shape | compute | memory | collective | bottleneck |"
+          " useful/HLO flops | peak mem/chip | compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        tc, tm, tl = r["t_compute"], r["t_memory"], r["t_collective"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(tc)} | {fmt_t(tm)} |"
+              f" {fmt_t(tl)} | {r['bottleneck']} |"
+              f" {100 * r['useful_flops_frac']:.0f}% |"
+              f" {r['mem']['peak_hint'] / 1e9:.1f} GB |"
+              f" {r['compile_s']:.0f} s |")
+    # summary stats
+    n_mem = sum(1 for r in rows if r["bottleneck"] == "memory")
+    n_coll = sum(1 for r in rows if r["bottleneck"] == "collective")
+    n_comp = sum(1 for r in rows if r["bottleneck"] == "compute")
+    print(f"\ncells={len(rows)} memory-bound={n_mem} "
+          f"collective-bound={n_coll} compute-bound={n_comp}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

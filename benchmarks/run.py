@@ -1,0 +1,296 @@
+"""Benchmark harness — one function per paper table (+ kernel/system
+micro-benchmarks).  Prints ``name,value,paper_value`` CSV rows so every
+reproduced number sits next to the paper's.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--table N]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+PAPER = {
+    # Table I: (mha_bytes, actual_bytes, ratio)
+    "table1": {"deepseek-v3": (65536, 1152, 57), "llama-3-70b": (32768, 4096, 8),
+               "mixtral-8x22b": (24576, 4096, 6), "qwen-2.5-72b": (32768, 4096, 8)},
+    # Table III: (status_quo_batch, arch_aware_batch)
+    "table3": {"deepseek-v3": (14, 104), "llama-3-70b": (22, 22),
+               "mixtral-8x22b": (42, 31), "qwen-2.5-72b": (22, 22)},
+    # Table IV: (capacity_label, ttft_p99_s, tput)
+    "table4": [("GPU-only", 40, 4.2, 1450), ("+ CPU DRAM", 200, 2.8, 2100),
+               ("+ CXL 3.0", 712, 1.8, 2850), ("+ NVMe (GDS)", 4813, 1.5, 3200),
+               ("+ RDMA Pool", 38912, 1.1, 3950),
+               ("Full system", 38912, 1.1, 4150)],
+    # Table V: workload -> (lru, ema, bayes)
+    "table5": {"sharegpt": (59.5, 59.5, 69.8), "lmsys": (77.8, 77.8, 84.2),
+               "agentic": (66.5, 66.5, 80.5)},
+    # Table VI: model -> (raw MB/1k tok, deduped MB, savings %)
+    "table6": {"llama-3-70b": (327.7, 251.7, 23.2),
+               "deepseek-v3": (70.3, 49.5, 29.6),
+               "mixtral-8x22b": (229.4, 205.5, 10.4)},
+    # Table VII: system -> (ttft_p50, ttft_p99, tbt_p99_ms, tput, cost)
+    "table7": {"vLLM 0.19": (1.2, 4.2, 48, 1450, 0.82),
+               "SGLang 0.5.9": (0.9, 3.1, 42, 1850, 0.68),
+               "TensorRT-LLM": (0.8, 2.8, 35, 2100, 0.61),
+               "FlexGen": (3.2, 12.1, 180, 650, 1.85),
+               "Ours (projected)": (0.4, 1.1, 32, 4150, 0.43)},
+    # Table VIII: component -> degradation % (L3-70B column)
+    "table8": {"arch-aware sizing": -73.8, "bayesian prediction": -28.6,
+               "multi-tier placement": -31.2, "head-granular eviction": -8.9,
+               "deduplication": -4.2, "rope prefetching": -5.1},
+}
+
+
+def _row(name: str, value, paper=None) -> None:
+    pv = "" if paper is None else paper
+    print(f"{name},{value},{pv}")
+
+
+# ---------------------------------------------------------------------------
+def table_i() -> None:
+    """KV bytes/token/layer: MHA-equivalent vs architecture-aware."""
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.core import sizing
+    print("# Table I — per-token-per-layer KV bytes (ours vs paper)")
+    for name, cfg in PAPER_MODELS.items():
+        r = sizing.sizing_report(cfg)
+        exp = PAPER["table1"][name]
+        _row(f"table1.{name}.mha_bytes", int(r.mha_equivalent), exp[0])
+        _row(f"table1.{name}.actual_bytes", int(r.per_token_layer), exp[1])
+        _row(f"table1.{name}.ratio", round(r.compression, 1), exp[2])
+
+
+def table_iii() -> None:
+    """Max batch size, status-quo vs arch-aware sizing."""
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.core import sizing
+    print("# Table III — max batch @30GB KV, n_max=4096, 8-way TP")
+    for name, cfg in PAPER_MODELS.items():
+        exp = PAPER["table3"][name]
+        sq = sizing.status_quo_max_batch(cfg, 30e9, 4096, tp=8)
+        aa = sizing.max_batch(cfg, 30e9, 4096)
+        _row(f"table3.{name}.status_quo", sq, exp[0])
+        _row(f"table3.{name}.arch_aware", aa, exp[1])
+        _row(f"table3.{name}.tput_gain", round(aa / max(sq, 1), 1),
+             round(exp[1] / exp[0], 1))
+
+
+def table_v(fast: bool = False) -> Dict[str, float]:
+    """Trace-replay hit rates: LRU / EMA / Bayesian x 3 workloads."""
+    from repro.traces.replay import run_table_v
+    print("# Table V — cache hit rates via trace replay (mean±std)")
+    seeds = (0, 1) if fast else (0, 1, 2, 3, 4)
+    n_sessions = 60 if fast else 100
+    rows = run_table_v(n_sessions=n_sessions, seeds=seeds)
+    out = {}
+    for r in rows:
+        exp = PAPER["table5"][r["workload"]]
+        idx = {"lru": 0, "ema": 1, "bayesian": 2}[r["policy"]]
+        _row(f"table5.{r['workload']}.{r['policy']}",
+             f"{100 * r['hit_mean']:.1f}±{100 * r['hit_std']:.1f}",
+             exp[idx])
+        out[f"{r['workload']}.{r['policy']}"] = r["hit_mean"]
+    return out
+
+
+def table_vi() -> None:
+    """Checkpoint dedup savings per 1,000 cached tokens.
+
+    Scenario: checkpoint the live KV of all concurrent sessions to Tier 5
+    (warm-start persistence).  Blocks shared across sessions (system
+    prompts / templates / tool contexts) are stored once — the delta
+    manifest references them by hash.  Raw sizes are exact per-model
+    (eq. 3 x n_layers); the dedup ratio comes from the workload snapshot
+    (paper band: 10-30%, varying with the shared-prompt share).
+    """
+    from collections import defaultdict
+    from repro.configs.paper_models import PAPER_MODELS
+    from repro.core import sizing
+    from repro.core.dedup import ContentStore, content_hash, delta_checkpoint
+    from repro.traces import GENERATORS, TraceConfig
+    print("# Table VI — KV checkpoint dedup (per 1,000 tokens)")
+    # model -> workload snapshot (paper reports one workload mix; we pair
+    # each model with a plausible deployment mix and report the band)
+    pairing = {"llama-3-70b": "lmsys", "deepseek-v3": "agentic",
+               "mixtral-8x22b": "sharegpt"}
+    for name, wl in pairing.items():
+        cfg = PAPER_MODELS[name]
+        per_tok = sizing.per_token_layer_bytes(cfg) * cfg.n_layers
+        raw_mb = per_tok * 1000 / 1e6
+        trace = GENERATORS[wl](TraceConfig(n_sessions=64, seed=0,
+                                           concurrency=32))
+        # snapshot: every session's distinct context blocks
+        per_session = defaultdict(list)
+        for ev in trace:
+            if ev.content_id not in per_session[ev.session]:
+                per_session[ev.session].append(ev.content_id)
+        store = ContentStore()
+        blocks = []
+        for sid, ids in per_session.items():
+            for cid in ids:
+                blocks.append((content_hash(cid, salt=name), per_tok * 128))
+        manifest = delta_checkpoint(blocks, store)
+        savings = manifest.savings
+        dedup_mb = raw_mb * (1 - savings)
+        exp = PAPER["table6"][name]
+        _row(f"table6.{name}.raw_mb", round(raw_mb, 1), exp[0])
+        _row(f"table6.{name}.dedup_mb", round(dedup_mb, 1), exp[1])
+        _row(f"table6.{name}.savings_pct", round(100 * savings, 1), exp[2])
+
+
+def table_iv_vii_viii(hit_rates: Dict[str, float]) -> None:
+    """Analytical projections: tier increments, end-to-end, ablations."""
+    from repro.core.projection import Projector, WorkloadModel
+    hit = hit_rates.get("lmsys.bayesian", 0.842)
+    lru = hit_rates.get("lmsys.lru", 0.778)
+    proj = Projector(wl=WorkloadModel(hit_rate_hot=hit))
+    print("# Table IV — projected incremental tier impact (Llama-3-70B,"
+          " LMSYS, 128K ctx)")
+    for i, r in enumerate(proj.table_iv()):
+        exp = PAPER["table4"][i]
+        cap_gb = min(r.capacity_bytes, proj.capacity(5)) / 1024 ** 3
+        _row(f"table4.{r.config}.capacity_gb", round(cap_gb), exp[1])
+        _row(f"table4.{r.config}.ttft_p99_s", round(r.ttft_p99, 1), exp[2])
+        _row(f"table4.{r.config}.tput", round(r.tput_tok_s_gpu), exp[3])
+
+    print("# Table VII — projected end-to-end (ours vs published baselines)")
+    ours = proj.project(6, name="ours")
+    for sysname, exp in PAPER["table7"].items():
+        if sysname.startswith("Ours"):
+            _row("table7.ours.ttft_p50", round(ours.ttft_p50, 2), exp[0])
+            _row("table7.ours.ttft_p99", round(ours.ttft_p99, 2), exp[1])
+            _row("table7.ours.tput", round(ours.tput_tok_s_gpu), exp[3])
+            _row("table7.ours.cost_mtok", round(ours.cost_per_mtok, 2),
+                 exp[4])
+    # FlexGen model: CPU+disk tiers only, reactive policy, LRU-grade
+    # hits, and a non-paged allocator (0.45x the PagedAttention anchor's
+    # achievable batch)
+    flexgen = proj.project(4, name="flexgen-style", predictive=False,
+                           hit_rate=lru, batch_factor=0.45)
+    _row("table7.reactive_offload.tput", round(flexgen.tput_tok_s_gpu),
+         PAPER["table7"]["FlexGen"][3])
+    _row("table7.speedup_vs_reactive",
+         round(ours.tput_tok_s_gpu / flexgen.tput_tok_s_gpu, 1), 6.4)
+
+    print("# Table VIII — projected ablations (throughput delta %)")
+    rows = proj.table_viii(lambda pol: hit_rates.get(f"lmsys.{pol}", lru))
+    for r in rows:
+        exp = PAPER["table8"].get(r["component"])
+        _row(f"table8.{r['component']}.delta_pct",
+             round(r["delta_pct"], 1), exp)
+
+
+def table_ix(fast: bool = False) -> None:
+    """Hyperparameter sensitivity via LMSYS replay."""
+    from repro.configs.paper_models import LLAMA3_70B
+    from repro.traces import TraceConfig, lmsys_trace
+    from repro.traces.replay import REPLAY_HOT_BLOCKS, replay
+    print("# Table IX — parameter sensitivity (LMSYS replay)")
+    trace = lmsys_trace(TraceConfig(n_sessions=60 if fast else 100, seed=0))
+    hot = REPLAY_HOT_BLOCKS["lmsys"]
+
+    def run(**predictor_kwargs):
+        r = replay(trace, LLAMA3_70B, policy="bayesian", workload="lmsys",
+                   hot_blocks=hot,
+                   predictor_kwargs=predictor_kwargs or None)
+        return r.hit_rate
+
+    base = run()
+    # eviction recency-bias sweep (the policy's predicted-reuse horizon —
+    # our analogue of the paper's EMA decay: how strongly recency is
+    # discounted against predicted reuse)
+    d_rates = []
+    for h in (25.0, 50.0, 100.0, 200.0, 400.0):
+        r = replay(trace, LLAMA3_70B, policy="bayesian", workload="lmsys",
+                   hot_blocks=hot, policy_kwargs={"horizon": h})
+        d_rates.append(r.hit_rate)
+    _row("table9.ema_decay(recency_bias).variation_pct",
+         round(100 * (max(d_rates) - min(d_rates)) / base, 2), "<5")
+    p_rates = [run(prior_alpha=a, prior_beta=a) for a in (0.5, 1.0, 4.0)]
+    _row("table9.beta_prior.variation_pct",
+         round(100 * (max(p_rates) - min(p_rates)) / base, 2), "<2")
+    c_rates = [run(confidence_k=k) for k in (5.0, 20.0, 80.0)]
+    _row("table9.confidence_k.variation_pct",
+         round(100 * (max(c_rates) - min(c_rates)) / base, 2), "<3")
+
+
+def micro_benchmarks() -> None:
+    """System micro-benchmarks backing the paper's latency claims."""
+    from repro.core.bayesian import BayesianReusePredictor
+    from repro.core.dedup import RadixTree
+    print("# Micro — component latencies")
+    tree = RadixTree(128)
+    rng = np.random.default_rng(0)
+    seqs = [list(rng.integers(0, 1000, size=512)) for _ in range(200)]
+    for i, s in enumerate(seqs):
+        tree.insert(s, [f"b{i}-{j}" for j in range(4)])
+    t0 = time.perf_counter()
+    n = 0
+    for s in seqs:
+        tree.match(s)
+        n += 4
+    us = (time.perf_counter() - t0) / n * 1e6
+    _row("micro.radix_lookup_us_per_block", round(us, 2), "<1")
+    pred = BayesianReusePredictor()
+    t0 = time.perf_counter()
+    for i in range(20000):
+        pred.observe("system_prompt", "same_tool_repeat", i % 3 != 0)
+    us = (time.perf_counter() - t0) / 20000 * 1e6
+    _row("micro.bayes_update_us", round(us, 2), "O(1)")
+    t0 = time.perf_counter()
+    for _ in range(20000):
+        pred.reuse_probability("system_prompt", "same_tool_repeat")
+    us = (time.perf_counter() - t0) / 20000 * 1e6
+    _row("micro.bayes_query_us", round(us, 2), "O(1)")
+
+
+def kernel_benchmarks() -> None:
+    """Interpret-mode allclose spot checks (full sweeps in tests/)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    print("# Kernels — interpret-mode allclose vs oracles")
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(10, 64, 2, 64)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(10, 64, 2, 64)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(10)[:8].reshape(2, 4), jnp.int32)
+    ln = jnp.asarray([256, 100], jnp.int32)
+    err = float(jnp.max(jnp.abs(
+        ops.paged_decode(q, kp, vp, bt, ln, interpret=True)
+        - ops.paged_decode_ref(q, kp, vp, bt, ln))))
+    _row("kernel.paged_decode.max_err", f"{err:.2e}", "<1e-5")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--table", default=None,
+                    help="run one: 1,3,4,5,6,7,8,9,micro,kernels")
+    args = ap.parse_args()
+    t0 = time.time()
+    sel = args.table
+    hit_rates: Dict[str, float] = {}
+    if sel in (None, "1"):
+        table_i()
+    if sel in (None, "3"):
+        table_iii()
+    if sel in (None, "5", "4", "7", "8"):
+        hit_rates = table_v(fast=args.fast)
+    if sel in (None, "6"):
+        table_vi()
+    if sel in (None, "4", "7", "8"):
+        table_iv_vii_viii(hit_rates)
+    if sel in (None, "9"):
+        table_ix(fast=args.fast)
+    if sel in (None, "micro"):
+        micro_benchmarks()
+    if sel in (None, "kernels"):
+        kernel_benchmarks()
+    print(f"# done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's sizing engine + a tiny model served end-to-end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.config import reduce_config
+from repro.configs import get_config
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import sizing
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+
+def main():
+    # 1. Architecture-variant-aware sizing (paper §III-A) -----------------
+    print("=== KV cache sizing across attention variants (Table I/III) ===")
+    for name, cfg in PAPER_MODELS.items():
+        r = sizing.sizing_report(cfg)
+        print(f"{name:16s} {r.variant:4s} {r.per_token_layer:7.0f} B/tok/layer"
+              f"  (MHA-equivalent {r.mha_equivalent:6.0f} B, "
+              f"{r.compression:5.1f}x)  batch {r.max_batch_status_quo:4d}"
+              f" -> {r.max_batch_arch_aware:4d}")
+
+    # 2. Serve a tiny llama with the predictive multi-tier cache ---------
+    print("\n=== Serving with predictive multi-tier KV cache ===")
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    eng = ServingEngine(cfg, EngineConfig(max_len=256,
+                                          kv_budget_bytes=16e6))
+    print(f"decode slots (sizing-engine admission): {eng.scheduler.n_slots}"
+          f", block = {eng.manager.block_tokens} tokens")
+    rng = np.random.default_rng(0)
+    system_prompt = [int(t) for t in rng.integers(0, 200, size=128)]
+    for i in range(4):
+        user = [int(t) for t in rng.integers(0, 200, size=16)]
+        eng.submit(system_prompt + user,
+                   params=SamplingParams(max_new_tokens=8),
+                   session_id=f"user{i}", block_type="system_prompt")
+    stats = eng.run()
+    s, c = stats["scheduler"], stats["cache"]
+    print(f"served {s['done']} requests; prefix-hit blocks "
+          f"{s['prefix_hit_blocks']} (system prompt reused, prefill "
+          f"skipped); dedup hits {c['dedup']['dedup_hits']}; "
+          f"hot hit-rate {c['hit_rate_hot']:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Training driver: a small llama-family model on the synthetic pipeline
+with delta-encoded checkpoint/restart (kill it mid-run and re-launch —
+it resumes bit-exactly).
+
+    PYTHONPATH=src python examples/train_demo.py [--steps 300]
+"""
+import argparse
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_demo")
+    args = ap.parse_args()
+    train_launch.main([
+        "--arch", "llama3.2-1b", "--reduced",
+        "--steps", str(args.steps),
+        "--seq-len", "64", "--global-batch", "4",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,387 @@
+"""The predictive multi-tier KV cache manager — the paper's contribution
+wired together (Fig. 1).
+
+Orchestrates:
+  * architecture-variant-aware sizing          (core/sizing.py,   §III-A)
+  * the six-tier hierarchy                     (core/tiers.py,    §III-B)
+  * Bayesian reuse prediction                  (core/bayesian.py, §III-C)
+  * head-granular EMA eviction                 (core/eviction.py, §III-D)
+  * RoPE-aware prefetching                     (core/prefetch.py, §III-E)
+  * content-addressable dedup + radix tree     (core/dedup.py,    §III-F)
+  * agentic task-transition prediction         (core/agentic.py,  §III-G)
+
+The manager is model-compute-agnostic: it tracks block *metadata* and tier
+residency, so the same object drives both the live serving engine
+(serving/engine.py, payload = real KV arrays) and the trace-replay
+evaluation (traces/replay.py, metadata only) — matching the paper's §V
+methodology.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import sizing
+from repro.core.agentic import MarkovToolPredictor, SessionFeatures, classify_session
+from repro.core.bayesian import BayesianReusePredictor
+from repro.core.dedup import ContentStore, RadixTree, content_hash
+from repro.core.eviction import (BayesianPolicy, BlockMeta, EMAPolicy,
+                                 EvictionPolicy, HeadImportanceTracker,
+                                 LRUPolicy)
+from repro.core.policy import PlacementPolicy
+from repro.core.prefetch import RoPEPrefetcher
+from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError, TierHierarchy,
+                              TierSpec)
+
+
+@dataclass
+class AccessResult:
+    block_id: str
+    hit: bool                    # resident in the hot set (tiers 0-1)?
+    tier: Optional[int]          # tier found in (None = cold miss)
+    fetch_time: float            # modelled transfer seconds (0 for t0 hit)
+    recomputed: bool = False
+
+
+@dataclass
+class ManagerStats:
+    accesses: int = 0
+    hot_hits: int = 0            # tier 0+1 (paper Table V definition)
+    tier_hits: Dict[int, int] = field(default_factory=dict)
+    cold_misses: int = 0
+    promotions: int = 0
+    demotions: int = 0
+    prefetch_issued: int = 0
+    dedup_hits: int = 0
+    fetch_time: float = 0.0
+    recompute_time: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hot_hits / self.accesses if self.accesses else 0.0
+
+
+class PredictiveCacheManager:
+    """Paper Fig. 1: the unified system."""
+
+    def __init__(self, cfg: ModelConfig, *,
+                 specs: Sequence[TierSpec] = PAPER_TIER_SPECS,
+                 policy: str = "bayesian",
+                 enable_dedup: bool = True,
+                 enable_prefetch: bool = True,
+                 enable_head_eviction: bool = True,
+                 enable_multi_tier: bool = True,
+                 hot_tiers: Tuple[int, ...] = (0, 1),
+                 backing_root: Optional[str] = None):
+        self.cfg = cfg
+        self.block_tokens = sizing.block_tokens(cfg)
+        self.block_bytes = sizing.block_bytes(cfg)
+        self.hierarchy = TierHierarchy(
+            specs if enable_multi_tier else specs[:2],
+            backing_root=backing_root)
+        self.predictor = BayesianReusePredictor()
+        self.head_tracker = (HeadImportanceTracker(cfg)
+                             if enable_head_eviction else None)
+        self.policy_name = policy
+        if policy == "lru":
+            self.evictor: EvictionPolicy = LRUPolicy()
+        elif policy == "ema":
+            self.evictor = EMAPolicy()
+        else:
+            self.evictor = BayesianPolicy(self.head_tracker)
+        self.placement = PlacementPolicy(self.hierarchy)
+        self.store = ContentStore() if enable_dedup else None
+        self.radix = RadixTree(self.block_tokens)
+        self.prefetcher = (RoPEPrefetcher(self.block_tokens, cfg.n_layers)
+                           if enable_prefetch else None)
+        self.agentic = MarkovToolPredictor()
+        self.hot_tiers = hot_tiers
+        self.metas: Dict[str, BlockMeta] = {}
+        self.stats = ManagerStats()
+        self._clock = 0.0
+        self._ids = itertools.count()
+        self._lock = threading.RLock()
+        self._payloads: Dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    # time base (trace replay advances a virtual clock)
+    # ------------------------------------------------------------------
+    def tick(self, dt: float = 1.0) -> float:
+        self._clock += dt
+        return self._clock
+
+    @property
+    def now(self) -> float:
+        return self._clock
+
+    # ------------------------------------------------------------------
+    # block registration (prefill path)
+    # ------------------------------------------------------------------
+    def _new_block_id(self) -> str:
+        return f"blk{next(self._ids)}"
+
+    def register_block(self, tokens: Sequence[int], *,
+                       block_type: str = "user_context",
+                       payload: Optional[np.ndarray] = None,
+                       recompute_cost: float = 0.05,
+                       positions: Tuple[int, int] = (0, 0)) -> Tuple[str, bool]:
+        """Allocate (or dedup) one KV block; returns (block_id, was_dedup).
+
+        Dedup (§III-F): identical content -> refcount bump, no new bytes.
+        """
+        with self._lock:
+            h = content_hash(tokens, salt=self.cfg.name)
+            if self.store is not None:
+                canonical, dup = self.store.intern(h, self._new_block_id())
+                if dup and canonical in self.metas:
+                    self.stats.dedup_hits += 1
+                    return canonical, True
+                bid = canonical
+            else:
+                bid = self._new_block_id()
+            meta = BlockMeta(block_id=bid, nbytes=self.block_bytes,
+                             block_type=block_type, last_access=self._clock,
+                             access_count=1, recompute_cost=recompute_cost,
+                             positions=positions)
+            meta.content_hash = h          # type: ignore[attr-defined]
+            meta.reuse_prob = self.predictor.reuse_probability(
+                block_type, "reasoning_step")
+            self.metas[bid] = meta
+            if payload is not None:
+                self._payloads[bid] = payload
+            self._admit(meta, payload)
+            return bid, False
+
+    def register_sequence(self, tokens: Sequence[int], *,
+                          block_type: str = "user_context",
+                          recompute_cost_per_block: float = 0.05) -> List[str]:
+        """Split a token sequence into blocks, dedup each, register the
+        prefix in the radix tree, return the block ids."""
+        bt = self.block_tokens
+        ids: List[str] = []
+        n = (len(tokens) // bt) * bt
+        for i in range(0, n, bt):
+            bid, _ = self.register_block(
+                tokens[i:i + bt], block_type=block_type,
+                recompute_cost=recompute_cost_per_block,
+                positions=(i, i + bt))
+            ids.append(bid)
+        if ids:
+            self.radix.insert(tokens[:n], ids)
+        return ids
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[str]:
+        """Radix longest-prefix match -> reusable block ids (skipped
+        prefill compute for the caller)."""
+        return [bid for bid in self.radix.match(tokens) if bid in self.metas]
+
+    # ------------------------------------------------------------------
+    # admission & eviction
+    # ------------------------------------------------------------------
+    def _admit(self, meta: BlockMeta, payload: Optional[np.ndarray],
+               tier_id: int = 0) -> None:
+        self._make_room(tier_id, meta.nbytes)
+        try:
+            self.hierarchy[tier_id].write(meta.block_id, payload,
+                                          nbytes=meta.nbytes)
+        except CapacityError:
+            # tier saturated with unevictable blocks -> place lower
+            for t in self.hierarchy.active_tiers():
+                if t.spec.tier_id > tier_id and t.free >= meta.nbytes:
+                    t.write(meta.block_id, payload, nbytes=meta.nbytes)
+                    return
+
+    def _make_room(self, tier_id: int, nbytes: float,
+                   _depth: int = 0) -> None:
+        """Recursive demotion cascade: tier t's victims demote INTO tier
+        t+1, which first makes room by pushing its own victims further
+        down.  Without the cascade a full lower tier freezes forever and
+        the hierarchy degenerates to a single hot tier.  Victim selection
+        is batched (one policy scan frees several blocks) so replay stays
+        O(accesses)."""
+        if _depth >= self.hierarchy.n_tiers:
+            return
+        tier = self.hierarchy[tier_id]
+        if not tier.available or tier.free >= nbytes:
+            return
+        need = int((nbytes - tier.free) // max(1.0, self.block_bytes)) + 2
+        metas = [self.metas[b] for b in tier.blocks() if b in self.metas]
+        victims = self.evictor.select_victims(metas, self._clock, need)
+        nxt = None
+        for t in self.hierarchy.tiers[tier_id + 1:]:
+            if t.available:
+                nxt = t.spec.tier_id
+                break
+        hot_exit = (tier_id in self.hot_tiers
+                    and (nxt is None or nxt not in self.hot_tiers))
+        for victim in victims:
+            if hot_exit:
+                self._observe_drop(victim)
+            if nxt is None:
+                tier.evict(victim.block_id)
+                self.radix.remove_block(victim.block_id)
+                self._payloads.pop(victim.block_id, None)
+                self.metas.pop(victim.block_id, None)
+            else:
+                self._make_room(nxt, victim.nbytes, _depth + 1)
+                try:
+                    self.hierarchy.move(victim.block_id, tier_id, nxt)
+                    self.stats.demotions += 1
+                except CapacityError:
+                    tier.evict(victim.block_id)
+                    self.radix.remove_block(victim.block_id)
+                    self._payloads.pop(victim.block_id, None)
+                    self.metas.pop(victim.block_id, None)
+
+    def _evict_one(self, tier_id: int) -> bool:
+        free_before = self.hierarchy[tier_id].free
+        self._make_room(tier_id, free_before + self.block_bytes)
+        return self.hierarchy[tier_id].free > free_before
+
+    def _observe_drop(self, meta: BlockMeta) -> None:
+        """Bayesian miss signal: a block leaving the hot set that was
+        never re-looked-up since registration counts one miss for its
+        (type, transition) pair (observed once per block)."""
+        if meta.access_count <= 1 and \
+                not getattr(meta, "miss_observed", False):
+            self.predictor.observe(meta.block_type, "reasoning_step", False)
+            meta.miss_observed = True          # type: ignore[attr-defined]
+
+    def _next_tier(self, tier_id: int, nbytes: float) -> Optional[int]:
+        for t in self.hierarchy.tiers[tier_id + 1:]:
+            if t.available and t.free >= nbytes:
+                return t.spec.tier_id
+        return None
+
+    # ------------------------------------------------------------------
+    # the access path (decode / lookup)
+    # ------------------------------------------------------------------
+    def access(self, block_id: str, *, transition: str = "reasoning_step",
+               update_predictor: bool = True) -> AccessResult:
+        """One cache lookup.  Hit definition follows the paper's Table V:
+        resident in tiers 0-1.  Lower-tier residency counts as a miss but
+        costs a (modelled) fetch instead of a full recompute."""
+        with self._lock:
+            self.stats.accesses += 1
+            meta = self.metas.get(block_id)
+            loc = self.hierarchy.locate(block_id)
+            hit = loc is not None and loc in self.hot_tiers
+            fetch_time = 0.0
+            recomputed = False
+            if meta is None:
+                # unknown block: cold path, caller recomputes
+                self.stats.cold_misses += 1
+                return AccessResult(block_id, False, None, 0.0, True)
+            if update_predictor:
+                # a re-lookup IS a reuse event for this (type, transition)
+                # pair, regardless of which tier currently holds the block
+                self.predictor.observe(meta.block_type, transition, True)
+                meta.miss_observed = True      # type: ignore[attr-defined]
+            meta.reuse_prob = self.predictor.reuse_probability(
+                meta.block_type, transition)
+            meta.last_access = self._clock
+            meta.access_count += 1
+            if isinstance(self.evictor, EMAPolicy):
+                self.evictor.touch(meta)
+            if loc is None:
+                # dropped entirely -> recompute
+                self.stats.cold_misses += 1
+                self.stats.recompute_time += meta.recompute_cost
+                recomputed = True
+                self._admit(meta, self._payloads.get(block_id))
+            elif not hit:
+                self.stats.tier_hits[loc] = self.stats.tier_hits.get(loc, 0) + 1
+                fetch_time = self.hierarchy[loc].spec.transfer_time(meta.nbytes)
+                self.stats.fetch_time += fetch_time
+                # promote into the hot set
+                self._promote(block_id, loc, 0)
+            else:
+                self.stats.hot_hits += 1
+                self.stats.tier_hits[loc] = self.stats.tier_hits.get(loc, 0) + 1
+            return AccessResult(block_id, hit, loc, fetch_time, recomputed)
+
+    def _promote(self, block_id: str, src: int, dst: int) -> None:
+        meta = self.metas[block_id]
+        tier = self.hierarchy[dst]
+        while tier.free < meta.nbytes:
+            if not self._evict_one(dst):
+                return
+        self.hierarchy.move(block_id, src, dst)
+        self.stats.promotions += 1
+
+    # ------------------------------------------------------------------
+    # prefetch + agentic hooks
+    # ------------------------------------------------------------------
+    def prefetch_for_position(self, seq_blocks: Sequence[str],
+                              position: int) -> int:
+        if self.prefetcher is None:
+            return 0
+        reqs = self.prefetcher.plan(
+            seq_blocks, position,
+            resident=lambda b: (self.hierarchy.locate(b) in self.hot_tiers))
+        for r in reqs:
+            loc = self.hierarchy.locate(r.block_id)
+            if loc is not None and loc not in self.hot_tiers:
+                self._promote(r.block_id, loc, 0)
+        self.stats.prefetch_issued += len(reqs)
+        return len(reqs)
+
+    def on_tool_switch(self, prev_tool: Optional[str], tool: str,
+                       kv_bytes: float = 0.0) -> str:
+        """§III-G: record the transition, return its transition type."""
+        self.agentic.observe_transition(prev_tool, tool, kv_bytes)
+        ttype = self.agentic.transition_type(prev_tool, tool)
+        if self.head_tracker is not None and ttype in ("tool_switch",
+                                                       "agent_handoff"):
+            # bias eviction away from heads serving the outgoing task
+            self.head_tracker.set_transition_multipliers(
+                np.full(self.head_tracker.matrix.shape[1], 0.8))
+        return ttype
+
+    # ------------------------------------------------------------------
+    def release_sequence(self, block_ids: Sequence[str]) -> None:
+        """Drop refcounts when a request completes; free blocks that hit 0
+        AND have low predicted reuse (others linger for cross-request
+        reuse — that is the whole point of the paper)."""
+        for bid in block_ids:
+            meta = self.metas.get(bid)
+            if meta is None:
+                continue
+            if self.store is not None:
+                h = getattr(meta, "content_hash", None)
+                if h is not None:
+                    freed = self.store.release(h)
+                    if freed is None:
+                        continue     # other references remain
+            if meta.reuse_prob < 0.2:
+                loc = self.hierarchy.locate(bid)
+                if loc is not None:
+                    self.hierarchy[loc].evict(bid)
+                self.radix.remove_block(bid)
+                self.metas.pop(bid, None)
+                self._payloads.pop(bid, None)
+
+    def age_all(self) -> None:
+        if isinstance(self.evictor, EMAPolicy):
+            for m in self.metas.values():
+                self.evictor.age(m)
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Prometheus-style metrics (paper §IV Observability)."""
+        return {
+            "hit_rate_hot": self.stats.hit_rate,
+            "accesses": self.stats.accesses,
+            "promotions": self.stats.promotions,
+            "demotions": self.stats.demotions,
+            "cold_misses": self.stats.cold_misses,
+            "dedup": self.store.stats() if self.store else {},
+            "tiers": self.hierarchy.stats(),
+            "predictor": self.predictor.snapshot(),
+            "cost_dollars": self.hierarchy.total_cost_dollars(),
+        }

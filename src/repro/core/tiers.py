@@ -1,0 +1,416 @@
+"""Six-tier memory hierarchy for KV cache blocks (paper §III-B, Table II).
+
+TPU adaptation (DESIGN.md §Hardware-adaptation): the paper's tiers are
+GPU-centric (HBM3 / pinned DRAM via CUDA streams / CXL mmap / cuFile GDS /
+ibverbs RDMA / Lustre).  On a TPU pod the same hierarchy maps to:
+
+    Tier 0  device HBM     (jax arrays, donated in-place updates)
+    Tier 1  host DRAM      (numpy, pinned-host analogue; async D2H/H2D)
+    Tier 2  CXL pool       (mmap-backed store; on v5e hosts this models a
+                            CXL 3.0 expander attached to the host)
+    Tier 3  NVMe           (file-backed store, O_DIRECT-aligned records)
+    Tier 4  remote pool    (consistent-hash ring over ICI/DCN peers —
+                            one-sided RDMA read ~ remote host fetch)
+    Tier 5  parallel FS    (content-addressed files, dedup via SHA-256)
+
+Every tier implements the uniform ``TierManager`` interface with
+thread-safe Allocate / Read / Write / Evict / Stats (paper §IV).  Since
+this container has no CXL/NVMe/IB hardware, non-host tiers are backed by
+in-memory or file stores and *account* transfer time against the published
+bandwidth/latency specs — that accounting is what the trace replay and the
+analytical projections consume (paper §V-B methodology).
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Published hardware specifications (paper Table II)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TierSpec:
+    tier_id: int
+    name: str
+    bandwidth: float          # bytes / s
+    latency: float            # seconds (GPU-observed)
+    cost_per_gb_hour: float   # $ / GB / h
+    capacity: float           # bytes
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+
+GB = 1024 ** 3
+TB = 1024 ** 4
+
+# Capacities follow Table IV's cumulative column: 40 GB -> 200 -> 712 ->
+# 4.7 TB -> 38+ TB.
+PAPER_TIER_SPECS: Tuple[TierSpec, ...] = (
+    TierSpec(0, "gpu_hbm", 3.35e12, 100e-9, 0.500, 40 * GB),
+    TierSpec(1, "cpu_dram", 204e9, 3e-6, 0.050, 160 * GB),
+    TierSpec(2, "cxl_mem", 64e9, 500e-9, 0.030, 512 * GB),
+    TierSpec(3, "nvme_gds", 12e9, 10e-6, 0.020, 4 * TB),
+    TierSpec(4, "rdma_pool", 50e9, 5e-6, 0.005, 34 * TB),
+    TierSpec(5, "parallel_fs", 2e9, 1e-3, 0.001, 1000 * TB),
+)
+
+# TPU v5e single-host flavour (DESIGN.md): HBM 16 GB/chip, PCIe host link.
+TPU_V5E_TIER_SPECS: Tuple[TierSpec, ...] = (
+    TierSpec(0, "tpu_hbm", 819e9, 100e-9, 0.500, 16 * GB),
+    TierSpec(1, "host_dram", 128e9, 3e-6, 0.050, 128 * GB),
+    TierSpec(2, "cxl_mem", 64e9, 500e-9, 0.030, 512 * GB),
+    TierSpec(3, "nvme", 8e9, 20e-6, 0.020, 4 * TB),
+    TierSpec(4, "ici_remote", 50e9, 5e-6, 0.005, 34 * TB),
+    TierSpec(5, "parallel_fs", 2e9, 1e-3, 0.001, 1000 * TB),
+)
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+@dataclass
+class TierStats:
+    reads: int = 0
+    writes: int = 0
+    evictions: int = 0
+    bytes_read: float = 0.0
+    bytes_written: float = 0.0
+    sim_time: float = 0.0            # accumulated modelled transfer time
+    byte_hours: float = 0.0          # for $/Mtok accounting
+
+    def as_dict(self) -> dict:
+        return dataclasses_asdict(self)
+
+
+def dataclasses_asdict(obj) -> dict:
+    import dataclasses
+    return dataclasses.asdict(obj)
+
+
+# ---------------------------------------------------------------------------
+# TierManager — uniform interface (paper §IV)
+# ---------------------------------------------------------------------------
+class CapacityError(RuntimeError):
+    pass
+
+
+class TierManager:
+    """One memory tier: a block store with capacity + transfer accounting."""
+
+    def __init__(self, spec: TierSpec, *, backing_dir: Optional[str] = None):
+        self.spec = spec
+        self._store: Dict[str, Optional[np.ndarray]] = {}
+        self._sizes: Dict[str, float] = {}
+        self._used = 0.0
+        self._lock = threading.RLock()
+        self.stats = TierStats()
+        self.available = True
+        self._dir = backing_dir
+        if backing_dir:
+            os.makedirs(backing_dir, exist_ok=True)
+
+    # -- helpers ------------------------------------------------------------
+    def _path(self, block_id: str) -> str:
+        assert self._dir
+        return os.path.join(self._dir, hashlib.sha256(
+            block_id.encode()).hexdigest())
+
+    def _charge(self, nbytes: float, *, read: bool) -> float:
+        t = self.spec.transfer_time(nbytes)
+        self.stats.sim_time += t
+        if read:
+            self.stats.reads += 1
+            self.stats.bytes_read += nbytes
+        else:
+            self.stats.writes += 1
+            self.stats.bytes_written += nbytes
+        return t
+
+    # -- interface ------------------------------------------------------------
+    @property
+    def used(self) -> float:
+        return self._used
+
+    @property
+    def free(self) -> float:
+        return self.spec.capacity - self._used
+
+    def contains(self, block_id: str) -> bool:
+        with self._lock:
+            return block_id in self._sizes
+
+    def allocate(self, block_id: str, nbytes: float) -> None:
+        with self._lock:
+            if not self.available:
+                raise CapacityError(f"tier {self.spec.name} unavailable")
+            if block_id in self._sizes:
+                return
+            if self._used + nbytes > self.spec.capacity:
+                raise CapacityError(
+                    f"tier {self.spec.name}: {nbytes:.0f}B over capacity "
+                    f"({self._used:.0f}/{self.spec.capacity:.0f})")
+            self._sizes[block_id] = nbytes
+            self._store[block_id] = None
+            self._used += nbytes
+
+    def write(self, block_id: str, payload: Optional[np.ndarray],
+              nbytes: Optional[float] = None) -> float:
+        """Returns modelled transfer time (seconds)."""
+        with self._lock:
+            if block_id not in self._sizes:
+                size = float(nbytes if nbytes is not None
+                             else (payload.nbytes if payload is not None else 0))
+                self.allocate(block_id, size)
+            size = self._sizes[block_id]
+            if self._dir is not None and payload is not None:
+                np.save(self._path(block_id) + ".npy", payload)
+                self._store[block_id] = None
+            else:
+                self._store[block_id] = payload
+            return self._charge(size, read=False)
+
+    def read(self, block_id: str) -> Tuple[Optional[np.ndarray], float]:
+        """Returns (payload, modelled transfer time)."""
+        with self._lock:
+            if not self.available:
+                raise CapacityError(f"tier {self.spec.name} unavailable")
+            if block_id not in self._sizes:
+                raise KeyError(block_id)
+            size = self._sizes[block_id]
+            payload = self._store.get(block_id)
+            if payload is None and self._dir is not None:
+                path = self._path(block_id) + ".npy"
+                if os.path.exists(path):
+                    payload = np.load(path)
+            return payload, self._charge(size, read=True)
+
+    def evict(self, block_id: str) -> None:
+        with self._lock:
+            if block_id not in self._sizes:
+                return
+            self._used -= self._sizes.pop(block_id)
+            self._store.pop(block_id, None)
+            self.stats.evictions += 1
+            if self._dir is not None:
+                path = self._path(block_id) + ".npy"
+                if os.path.exists(path):
+                    os.remove(path)
+
+    def blocks(self) -> List[str]:
+        with self._lock:
+            return list(self._sizes)
+
+    def size_of(self, block_id: str) -> float:
+        return self._sizes[block_id]
+
+    def accrue_byte_hours(self, hours: float) -> None:
+        with self._lock:
+            self.stats.byte_hours += self._used * hours
+
+    def stats_dict(self) -> dict:
+        d = dataclasses_asdict(self.stats)
+        d.update(tier=self.spec.name, used=self._used,
+                 capacity=self.spec.capacity, available=self.available)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Tier 4: consistent-hash RDMA pool (paper §III-B / §IV / §VII scaling)
+# ---------------------------------------------------------------------------
+class ConsistentHashRing:
+    """Consistent hashing with virtual nodes; O(log n) lookup via bisect.
+
+    Node join/leave remaps only ~1/n of the key space — the property the
+    paper leans on for 1024+-node scaling and graceful failure handling.
+    """
+
+    def __init__(self, nodes: Sequence[str] = (), vnodes: int = 64):
+        self.vnodes = vnodes
+        self._ring: List[Tuple[int, str]] = []
+        self._nodes: set = set()
+        for n in nodes:
+            self.add_node(n)
+
+    @staticmethod
+    def _hash(key: str) -> int:
+        return int.from_bytes(
+            hashlib.sha256(key.encode()).digest()[:8], "big")
+
+    def add_node(self, node: str) -> None:
+        if node in self._nodes:
+            return
+        self._nodes.add(node)
+        for v in range(self.vnodes):
+            h = self._hash(f"{node}#{v}")
+            bisect.insort(self._ring, (h, node))
+
+    def remove_node(self, node: str) -> None:
+        if node not in self._nodes:
+            return
+        self._nodes.discard(node)
+        self._ring = [(h, n) for h, n in self._ring if n != node]
+
+    def lookup(self, key: str) -> str:
+        if not self._ring:
+            raise RuntimeError("hash ring empty")
+        h = self._hash(key)
+        idx = bisect.bisect_right(self._ring, (h, chr(0x10FFFF)))
+        if idx == len(self._ring):
+            idx = 0
+        return self._ring[idx][1]
+
+    @property
+    def nodes(self) -> List[str]:
+        return sorted(self._nodes)
+
+
+class RDMATier(TierManager):
+    """Distributed block pool across the fabric using a consistent hash
+    ring.  Each peer holds a shard; one-sided reads fetch remote blocks.
+    Node failure: the ring drops the peer and its blocks become misses
+    (re-fetched from tier 5 or recomputed) — graceful degradation."""
+
+    def __init__(self, spec: TierSpec, nodes: Sequence[str] = ("node0",),
+                 vnodes: int = 64):
+        super().__init__(spec)
+        self.ring = ConsistentHashRing(nodes, vnodes=vnodes)
+        self._node_store: Dict[str, Dict[str, float]] = {n: {} for n in nodes}
+
+    def placement(self, block_id: str) -> str:
+        return self.ring.lookup(block_id)
+
+    def allocate(self, block_id: str, nbytes: float) -> None:
+        super().allocate(block_id, nbytes)
+        node = self.placement(block_id)
+        self._node_store.setdefault(node, {})[block_id] = nbytes
+
+    def evict(self, block_id: str) -> None:
+        for store in self._node_store.values():
+            store.pop(block_id, None)
+        super().evict(block_id)
+
+    def add_node(self, node: str) -> None:
+        self.ring.add_node(node)
+        self._node_store.setdefault(node, {})
+
+    def fail_node(self, node: str) -> List[str]:
+        """Drop a peer; returns the block ids that were lost."""
+        self.ring.remove_node(node)
+        lost = list(self._node_store.pop(node, {}))
+        for bid in lost:
+            if self.contains(bid):
+                TierManager.evict(self, bid)
+        return lost
+
+    def node_load(self) -> Dict[str, float]:
+        return {n: sum(s.values()) for n, s in self._node_store.items()}
+
+
+# ---------------------------------------------------------------------------
+# The hierarchy
+# ---------------------------------------------------------------------------
+class TierHierarchy:
+    """Ordered tier stack with promote/demote and failure handling."""
+
+    def __init__(self, specs: Sequence[TierSpec] = PAPER_TIER_SPECS,
+                 *, backing_root: Optional[str] = None,
+                 rdma_nodes: Sequence[str] = ("node0", "node1", "node2",
+                                              "node3")):
+        self.tiers: List[TierManager] = []
+        for spec in specs:
+            if spec.tier_id == 4:
+                self.tiers.append(RDMATier(spec, nodes=rdma_nodes))
+            else:
+                backing = (os.path.join(backing_root, spec.name)
+                           if backing_root and spec.tier_id >= 3 else None)
+                self.tiers.append(TierManager(spec, backing_dir=backing))
+        self._lock = threading.RLock()
+
+    def __getitem__(self, tier_id: int) -> TierManager:
+        return self.tiers[tier_id]
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    def active_tiers(self) -> List[TierManager]:
+        return [t for t in self.tiers if t.available]
+
+    def locate(self, block_id: str) -> Optional[int]:
+        """Fastest tier currently holding the block."""
+        for t in self.tiers:
+            if t.available and t.contains(block_id):
+                return t.spec.tier_id
+        return None
+
+    def move(self, block_id: str, src: int, dst: int,
+             payload: Optional[np.ndarray] = None) -> float:
+        """Promote (dst < src) or demote (dst > src); returns modelled
+        transfer time (read from src + write to dst)."""
+        with self._lock:
+            s, d = self.tiers[src], self.tiers[dst]
+            if not s.contains(block_id):
+                raise KeyError(f"{block_id} not in tier {src}")
+            data, t_read = s.read(block_id)
+            nbytes = s.size_of(block_id)
+            t_write = d.write(block_id, payload if payload is not None
+                              else data, nbytes=nbytes)
+            s.evict(block_id)
+            return t_read + t_write
+
+    def fail_tier(self, tier_id: int) -> List[str]:
+        """Paper §VII: on tier failure, remove it from the promotion/
+        demotion graph and redistribute its blocks to adjacent tiers."""
+        with self._lock:
+            t = self.tiers[tier_id]
+            blocks = t.blocks()
+            moved, lost = [], []
+            for bid in blocks:
+                nbytes = t.size_of(bid)
+                payload = t._store.get(bid)
+                placed = False
+                for adj in self._adjacent(tier_id):
+                    try:
+                        self.tiers[adj].write(bid, payload, nbytes=nbytes)
+                        placed = True
+                        moved.append(bid)
+                        break
+                    except CapacityError:
+                        continue
+                if not placed:
+                    lost.append(bid)
+                t.evict(bid)
+            t.available = False
+            return lost
+
+    def restore_tier(self, tier_id: int) -> None:
+        self.tiers[tier_id].available = True
+
+    def _adjacent(self, tier_id: int) -> List[int]:
+        order = []
+        for delta in (1, -1, 2, -2, 3, -3, 4, -4, 5, -5):
+            j = tier_id + delta
+            if 0 <= j < len(self.tiers) and self.tiers[j].available:
+                order.append(j)
+        return order
+
+    # -- accounting ---------------------------------------------------------
+    def total_cost_dollars(self) -> float:
+        return sum(t.stats.byte_hours / GB * t.spec.cost_per_gb_hour
+                   for t in self.tiers)
+
+    def capacity_through(self, tier_id: int) -> float:
+        """Cumulative capacity of tiers 0..tier_id (paper Table IV col 2)."""
+        return sum(t.spec.capacity for t in self.tiers[:tier_id + 1])
+
+    def stats(self) -> List[dict]:
+        return [t.stats_dict() for t in self.tiers]

@@ -1,0 +1,102 @@
+"""Causal flash attention (prefill/training) — Pallas TPU kernel.
+
+The XLA fallback (models/attention.causal_attention) computes the full
+rectangular S x S score matrix and masks half of it away — 2x the causal
+ideal in both FLOPs and score traffic (measured in EXPERIMENTS.md §Perf).
+This kernel skips fully-masked KV blocks via the grid structure, holds
+the running softmax in VMEM (no HBM score materialization) and performs
+the [block_q, hd] x [hd, block_k] contractions on the MXU with
+128-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(2)      # query block
+    ki = pl.program_id(3)      # kv block (innermost, sequential)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skip: kv block strictly above the diagonal => no work
+    @pl.when(ki * block_k <= (qi + 1) * block_q - 1)
+    def _attend():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.einsum("qd,kd->qk", q, k) * scale          # [bq, bk]
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """Causal attention. q [B,S,Hq,hd], k/v [B,S,Hkv,hd] -> [B,S,Hq,hd].
+
+    GQA handled by expanding each query head to its KV head via the head
+    grid dimension (k/v blocks indexed at h // group).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    n_q = s // block_q
+    n_k = s // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale),
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, hd), q.dtype),
+        interpret=interpret,
+    )
+    return kernel(q, k, v)

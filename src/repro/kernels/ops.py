@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel bodies execute in
+Python for validation); on TPU backends the compiled MXU path is used.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.mla_paged_decode import mla_paged_decode
+from repro.kernels.paged_attention import paged_decode_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                 interpret: bool | None = None):
+    it = (not _on_tpu()) if interpret is None else interpret
+    return paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                  lengths, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q",
+                                             "block_k"))
+def flash_causal(q, k, v, block_q: int = 128, block_k: int = 128,
+                 interpret: bool | None = None):
+    it = (not _on_tpu()) if interpret is None else interpret
+    return flash_prefill(q, k, v, block_q=block_q, block_k=block_k,
+                         interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("d_latent", "interpret"))
+def mla_decode(q_lat, q_rope, latent_pages, block_tables, lengths,
+               d_latent: int, interpret: bool | None = None):
+    it = (not _on_tpu()) if interpret is None else interpret
+    return mla_paged_decode(q_lat, q_rope, latent_pages, block_tables,
+                            lengths, d_latent=d_latent, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
+                      block_tables, lengths, interpret: bool | None = None):
+    from repro.kernels.paged_attention import paged_decode_attention_int8
+    it = (not _on_tpu()) if interpret is None else interpret
+    return paged_decode_attention_int8(q, k_pages, v_pages, k_scales,
+                                       v_scales, block_tables, lengths,
+                                       interpret=it)
+
+
+# re-export oracles for test convenience
+paged_decode_ref = ref.paged_decode_attention_ref
+flash_causal_ref = ref.flash_prefill_ref
+mla_decode_ref = ref.mla_paged_decode_ref

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                               lengths) -> jax.Array:
+    """q [B,Hq,hd]; k/v_pages [N,page,Hkv,hd]; block_tables [B,P];
+    lengths [B] -> [B,Hq,hd]."""
+    b, hq, hd = q.shape
+    n, page, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    g = hq // hkv
+
+    def one(qb, bt, ln):
+        k = k_pages[bt].reshape(p_max * page, hkv, hd)   # gather pages
+        v = v_pages[bt].reshape(p_max * page, hkv, hd)
+        qg = qb.reshape(hkv, g, hd).astype(jnp.float32)
+        s = jnp.einsum("hgd,thd->hgt", qg, k.astype(jnp.float32))
+        s = s / math.sqrt(hd)
+        pos = jnp.arange(p_max * page)
+        s = jnp.where(pos[None, None, :] < ln, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hgt,thd->hgd", p, v.astype(jnp.float32))
+        return o.reshape(hq, hd)
+
+    return jax.vmap(one)(q, block_tables, lengths).astype(q.dtype)
+
+
+def mla_paged_decode_ref(q_lat, q_rope, latent_pages, block_tables,
+                         lengths, d_latent: int) -> jax.Array:
+    """q_lat [B,Hq,dl]; q_rope [B,Hq,dr]; latent_pages [N,page,dl+dr];
+    -> ctx [B,Hq,dl] (absorbed-form attention output in latent space)."""
+    b, hq, dl = q_lat.shape
+    dr = q_rope.shape[-1]
+    n, page, dtot = latent_pages.shape
+    p_max = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(dl // 4 + dr)   # hd ~ dl/4 convention of caller
+
+    def one(ql, qr, bt, ln):
+        lat = latent_pages[bt].reshape(p_max * page, dtot)
+        c, kr = lat[:, :dl], lat[:, dl:]
+        s = (jnp.einsum("hl,tl->ht", ql.astype(jnp.float32),
+                        c.astype(jnp.float32))
+             + jnp.einsum("hr,tr->ht", qr.astype(jnp.float32),
+                          kr.astype(jnp.float32))) * scale
+        pos = jnp.arange(p_max * page)
+        s = jnp.where(pos[None, :] < ln, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("ht,tl->hl", p, c.astype(jnp.float32))
+
+    return jax.vmap(one)(q_lat, q_rope, block_tables, lengths
+                         ).astype(q_lat.dtype)
+
+
+def flash_prefill_ref(q, k, v) -> jax.Array:
+    """Causal attention oracle. q [B,S,Hq,hd], k/v [B,S,Hkv,hd]."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    sc = sc / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def paged_decode_attention_int8_ref(q, k_pages, v_pages, k_scales,
+                                    v_scales, block_tables, lengths):
+    """Dequantize-then-attend oracle for the int8 paged kernel."""
+    k = k_pages.astype(jnp.float32) * k_scales.astype(jnp.float32)
+    v = v_pages.astype(jnp.float32) * v_scales.astype(jnp.float32)
+    return paged_decode_attention_ref(q, k.astype(q.dtype),
+                                      v.astype(q.dtype),
+                                      block_tables, lengths)

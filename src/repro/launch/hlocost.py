@@ -1,0 +1,417 @@
+"""Post-optimization HLO cost model with while-loop trip-count recovery.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation once —
+a ``lax.scan`` over 40 layers contributes its body cost a single time, so
+flops / bytes / collective counts are understated by the trip count.  This
+module parses ``compiled.as_text()`` (the optimized, SPMD-partitioned,
+fused HLO) and:
+
+  * recovers each while loop's static trip count from its condition
+    computation (scan conditions compare the induction variable against a
+    constant);
+  * attributes every op to its computation and multiplies by the product
+    of enclosing-loop trip counts;
+  * models HBM traffic as (operand bytes + result bytes) of each
+    *top-level* op per computation — post-fusion, this approximates what
+    actually moves through HBM (fusions count their boundary buffers,
+    not their internals);
+  * counts matmul flops from dot shapes (2 * result_elems * contraction)
+    and elementwise flops as result_elems;
+  * tallies collective wire bytes with ring-algorithm factors.
+
+All numbers are per-device: SPMD HLO shapes are the per-device shards.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "u64": 8, "s64": 8, "u32": 4, "s32": 4,
+                "u16": 2, "s16": 2, "u8": 1, "s8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+|ROOT\s+%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "custom-call"}
+_MOVE_OPS = {"copy", "convert", "transpose", "broadcast", "reshape",
+             "slice", "dynamic-slice", "dynamic-update-slice", "scatter",
+             "gather", "reverse", "concatenate", "pad", "select",
+             "reduce-scatter", "all-gather", "all-reduce", "all-to-all",
+             "collective-permute"}
+_CONTROL = {"while", "conditional", "call"}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_of(text: str, native: bool = False) -> float:
+    """Byte size of all shapes in `text`.  native=True charges floating
+    types at most 2 bytes/elem: XLA:CPU promotes bf16 dots to f32 and
+    inserts convert/transpose shims a native-bf16 TPU pipeline would not
+    emit, so inference-path traffic is modelled at bf16 width."""
+    tot = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        w = _DTYPE_BYTES[dt]
+        if native and dt in ("f32", "f64"):
+            w = 2
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        tot += n * w
+    return tot
+
+
+def _result_elems(text: str) -> float:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0.0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return float(n)
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_text: str            # shapes on the lhs
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # op name -> lhs
+
+
+@dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    wire_bytes: float = 0.0
+    bytes_native: float = 0.0       # floats charged at bf16 width
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+    detail: Optional[List] = None
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if line and not line[0].isspace():
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = Computation(hdr.group(2))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).replace("ROOT", "").strip().lstrip("%")
+        rhs = m.group(2)
+        # split lhs shapes from op kind: "<shape(s)> <kind>(operands...)"
+        km = re.search(r"\)?\s*([a-z][\w\-]*)\(", rhs)
+        kind = km.group(1) if km else "unknown"
+        lhs = rhs[:km.start()] if km else rhs
+        paren = rhs[km.end():] if km else ""
+        depth, args = 1, []
+        buf = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            if depth >= 1:
+                buf += ch
+        operands = _OPERAND_RE.findall(args[0] if args else "")
+        op = Op(name=name, kind=kind, result_text=lhs,
+                operands=[o.lstrip("%") for o in operands], line=line)
+        cur.ops.append(op)
+        cur.shapes[name] = lhs
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan conditions: compare(induction, constant(N)), direction=LT."""
+    const_vals = []
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                const_vals.append(int(m.group(1)))
+    for op in cond.ops:
+        if op.kind == "compare" and "direction=LT" in op.line and const_vals:
+            return max(1, max(const_vals))
+    return max(1, max(const_vals)) if const_vals else 1
+
+
+def _collective_wire(op: Op) -> Tuple[str, float, float]:
+    """Wire bytes at TPU-native widths (f32 charged 2B: XLA:CPU promotes
+    bf16 math to f32 and the promoted collectives with it)."""
+    kind = op.kind.replace("-start", "")
+    shapes = [(min(_DTYPE_BYTES.get(dt, 4), 2)
+               if dt in ("f32", "f64", "bf16", "f16")
+               else _DTYPE_BYTES.get(dt, 4), dims)
+              for dt, dims in _SHAPE_RE.findall(op.result_text)]
+    sizes = []
+    for b, dims in shapes:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(float(n * b))
+    if not sizes:
+        return kind, 0.0, 0.0
+    if len(sizes) == 1:
+        rbytes = sizes[0]
+    elif kind == "all-gather":
+        rbytes = max(sizes)          # (input, output) tuple of -start ops
+    elif kind == "reduce-scatter":
+        rbytes = min(sizes)
+    else:
+        rbytes = sum(sizes) / 2.0
+    g = 2
+    gm = _GROUPS_RE.search(op.line)
+    if gm:
+        g = max(2, len(gm.group(1).split(",")))
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.line)
+        if gi:
+            g = max(2, int(gi.group(2)))
+    if kind == "all-gather":
+        wire = rbytes * (g - 1) / g
+    elif kind == "all-reduce":
+        wire = 2.0 * rbytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = rbytes * (g - 1)
+    else:
+        wire = rbytes
+    return kind, rbytes, wire
+
+
+def analyze(hlo: str, debug: bool = False) -> CostSummary:
+    comps = parse_module(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                entry = m.group(2)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with a while op, else the largest
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+
+    summary = CostSummary()
+    if debug:
+        summary.detail = []
+    visited_stack: List[str] = []
+
+    # ops whose HBM traffic is slice-sized, not full-operand-sized: an
+    # in-place dynamic-update-slice on a donated KV cache moves only the
+    # update; gathers/dynamic-slices read only the selected rows.
+    SLICE_OPS = {"dynamic-update-slice": "update",
+                 "dynamic-slice": "result",
+                 "gather": "result",
+                 "scatter": "update"}
+
+    def _slice_traffic(op: Op, comp: Computation) -> Optional[float]:
+        """2x the moved-slice bytes for slice-like ops, else None."""
+        kind = op.kind
+        if kind not in SLICE_OPS:
+            return None
+        if SLICE_OPS[kind] == "result":
+            return 2.0 * _shape_bytes_of(op.result_text)
+        # update operand: dus -> operand 1; scatter -> last operand
+        idx = 1 if kind == "dynamic-update-slice" else len(op.operands) - 1
+        if idx < len(op.operands):
+            return 2.0 * _shape_bytes_of(comp.shapes.get(op.operands[idx],
+                                                         ""))
+        return 2.0 * _shape_bytes_of(op.result_text)
+
+    # layout/precision shims: XLA:CPU materializes f32 converts, masking
+    # selects and transposed copies around bf16 dots; a TPU pipeline fuses
+    # these into the consumer (which already counts its operand reads).
+    # A fusion is a shim iff it performs no arithmetic.  Excluded from the
+    # native byte count only.
+    _ARITH = {"dot", "add", "subtract", "multiply", "divide", "exponential",
+              "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+              "sqrt", "cbrt", "tanh", "logistic", "power", "reduce",
+              "reduce-window", "convolution", "maximum", "minimum", "abs",
+              "negate", "sign", "cosine", "sine", "atan2", "remainder",
+              "floor", "ceil", "round-nearest-afz", "clamp", "map", "sort",
+              "rng", "rng-bit-generator", "scatter"}
+
+    def _is_pure_move(op: Op, callee: Optional[Computation]) -> bool:
+        if op.kind in ("copy", "convert", "transpose", "reshape",
+                       "broadcast", "bitcast-convert"):
+            return True
+        if op.kind == "fusion" and callee is not None:
+            return not any(i.kind in _ARITH for i in callee.ops)
+        return False
+
+    def _fusion_traffic(op: Op, comp: Computation,
+                        callee: Optional[Computation],
+                        native: bool) -> float:
+        """Boundary traffic of a fusion, discounting in-place whole-buffer
+        pass-throughs: a dus inside the fusion whose target is as large as
+        the fusion result means the big buffer is carried through (donated
+        / loop-carried) and only the update slice actually moves."""
+        result = _shape_bytes_of(op.result_text, native)
+        total = result + sum(
+            _shape_bytes_of(comp.shapes.get(o, ""), native)
+            for o in op.operands)
+        if callee is not None:
+            for iop in callee.ops:
+                if iop.kind == "dynamic-update-slice" \
+                        and len(iop.operands) >= 2:
+                    buf = _shape_bytes_of(
+                        callee.shapes.get(iop.operands[0],
+                                          iop.result_text), native)
+                    upd = _shape_bytes_of(
+                        callee.shapes.get(iop.operands[1], ""), native)
+                    if buf >= 0.5 * result and buf > 4 * upd:
+                        total -= 2 * buf - 2 * upd
+                elif iop.kind == "dynamic-slice" and iop.operands:
+                    # a big buffer feeding the fusion from which only a
+                    # slice is read (e.g. one layer of a scanned stack)
+                    buf = _shape_bytes_of(
+                        callee.shapes.get(iop.operands[0], ""), native)
+                    sl = _shape_bytes_of(iop.result_text, native)
+                    if buf > 4 * sl and buf > result:
+                        total -= buf - sl
+        return max(total, 0.0)
+
+    def op_flops(op: Op, comp: Computation) -> float:
+        if op.kind == "dot":
+            relems = _result_elems(op.result_text)
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+            contr = 1.0
+            if m and op.operands:
+                lhs_shape = comp.shapes.get(op.operands[0], "")
+                sm = _SHAPE_RE.search(lhs_shape)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contr *= dims[int(ci)]
+            return 2.0 * relems * contr
+        if op.kind in ("fusion",):
+            # dots/arithmetic inside fusions are counted when walking the
+            # fusion computation; the fusion op itself moves data
+            return 0.0
+        if (op.kind in _NO_TRAFFIC or op.kind in _CONTROL
+                or op.kind in _MOVE_OPS
+                or op.kind.replace("-start", "") in _MOVE_OPS):
+            return 0.0
+        return _result_elems(op.result_text)
+
+    def walk(comp_name: str, mult: float, *, fusion_internal: bool = False):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in visited_stack:
+            return
+        visited_stack.append(comp_name)
+        for op in comp.ops:
+            kind = op.kind
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES and "-done" not in kind:
+                ckind, rbytes, wire = _collective_wire(op)
+                slot = summary.collectives.setdefault(
+                    ckind, {"count": 0, "bytes": 0.0, "wire": 0.0})
+                slot["count"] += mult
+                slot["bytes"] += rbytes * mult
+                slot["wire"] += wire * mult
+                summary.wire_bytes += wire * mult
+            if kind == "while":
+                m = _WHILE_ATTR_RE.search(op.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    tm = _TRIP_RE.search(op.line)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        trips = (_trip_count(comps[cond])
+                                 if cond in comps else 1)
+                    summary.trip_counts[body] = trips
+                    walk(body, mult * trips)
+                continue
+            if kind in ("call", "conditional", "async-start"):
+                m = _CALL_ATTR_RE.search(op.line)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            if kind == "fusion":
+                m = _CALL_ATTR_RE.search(op.line)
+                callee = comps.get(m.group(1)) if m else None
+                if not fusion_internal:
+                    traffic = _fusion_traffic(op, comp, callee, False)
+                    summary.bytes_accessed += traffic * mult
+                    native = 0.0
+                    if not _is_pure_move(op, callee):
+                        native = _fusion_traffic(op, comp, callee, True) \
+                            * mult
+                        summary.bytes_native += native
+                    if summary.detail is not None and native > 1e8:
+                        summary.detail.append(
+                            (native, "fusion", op.line.strip()[:120]))
+                if m:
+                    walk(m.group(1), mult, fusion_internal=True)
+                continue
+            if kind in _NO_TRAFFIC:
+                continue
+            if not fusion_internal:
+                traffic = _slice_traffic(op, comp)
+                if traffic is not None:
+                    native_traffic = traffic   # slice bytes already small
+                else:
+                    traffic = (_shape_bytes_of(op.result_text)
+                               + sum(_shape_bytes_of(comp.shapes.get(o, ""))
+                                     for o in op.operands))
+                    native_traffic = (
+                        _shape_bytes_of(op.result_text, True)
+                        + sum(_shape_bytes_of(comp.shapes.get(o, ""), True)
+                              for o in op.operands))
+                if _is_pure_move(op, None):
+                    native_traffic = 0.0
+                summary.bytes_accessed += traffic * mult
+                summary.bytes_native += native_traffic * mult
+                if summary.detail is not None and \
+                        native_traffic * mult > 1e8:
+                    summary.detail.append(
+                        (native_traffic * mult, op.kind,
+                         op.line.strip()[:120]))
+            summary.flops += op_flops(op, comp) * mult
+        visited_stack.pop()
+
+    # fusion computations contain the real dots: walk them for flops only
+    walk(entry, 1.0)
+    # dots living inside fusion computations: count flops with the
+    # multiplier of the fusion's parent — handled above via recursion with
+    # fusion_internal=True (bytes skipped, flops counted).
+    return summary

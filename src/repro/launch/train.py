@@ -1,0 +1,114 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs real steps on the available devices (CPU smoke / small mesh) with
+checkpoint/restart: kill it at any step and re-launch with the same
+--ckpt-dir — it resumes from the latest manifest bit-exactly (the data
+pipeline is a pure function of the step counter).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SHAPES, ShapeConfig, reduce_config
+from repro.configs import get_config
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.training import checkpoint as ckpt_mod
+from repro.training import data as data_mod
+from repro.training import optimizer as opt_mod
+from repro.training import train as train_mod
+from repro.training.optimizer import AdamWConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--crash-at", type=int, default=-1,
+                    help="fault-injection: exit(17) at this step")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    mesh = make_host_mesh()
+    shd = shlib.MeshSharding(mesh)
+    model = build_model(cfg, shd)
+    adamw = AdamWConfig(lr=args.lr, total_steps=max(args.steps, 100),
+                        warmup_steps=max(5, args.steps // 20))
+    step_fn = jax.jit(train_mod.make_train_step(
+        model, adamw=adamw, n_micro=args.n_micro,
+        grad_compress=args.grad_compress))
+
+    data = data_mod.SyntheticLM(data_mod.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch))
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = opt_mod.init_state(params)
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = ckpt_mod.CheckpointManager(args.ckpt_dir)
+        latest = mgr.latest_step()
+        if latest is not None:
+            (params, opt_state), _ = mgr.restore((params, opt_state))
+            start_step = latest
+            print(f"resumed from step {start_step}")
+
+    def make_batch(step):
+        raw = data.batch(step)
+        out = {"tokens": jnp.asarray(raw["tokens"]),
+               "labels": jnp.asarray(raw["labels"])}
+        if cfg.family == "vlm":
+            out["patches"] = jnp.zeros(
+                (args.global_batch, cfg.n_patches, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = jnp.zeros(
+                (args.global_batch, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+        return out
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        if step == args.crash_at:
+            print(f"fault injection: crashing at step {step}")
+            raise SystemExit(17)
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             make_batch(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)")
+        if mgr and ((step + 1) % args.ckpt_every == 0
+                    or step == args.steps - 1):
+            m = mgr.save(step + 1, (params, opt_state))
+            print(f"  ckpt @{step + 1}: "
+                  f"new {m['delta']['new_bytes'] / 1e6:.1f}MB "
+                  f"reused {m['delta']['reused_bytes'] / 1e6:.1f}MB")
+    print("final loss:", float(metrics["loss"]))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

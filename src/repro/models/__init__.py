@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model, FAMILIES
+from repro.models.common import PSpec, materialize, abstract, stack_specs, NOSHARD

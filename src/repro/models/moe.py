@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN with top-k routing (granite-moe archs).
+
+GShard-style capacity-bounded dispatch.  Tokens are reshaped into
+``[n_groups, group, d]`` with the group dim sharded over the data axes
+(so dispatch never crosses shards), and the top-k slots are processed by
+a sequential k-loop — peak dispatch tensor is O(group * E * C) per k-slot
+instead of O(group * k * E * C).  The group size is kept small (256)
+because the combine tensor scales with group^2 * k * cf.
+
+Expert weights are tensor-parallel over the per-expert hidden dim
+(``mlp`` -> model axis), which divides evenly for any expert count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import NOSHARD, PSpec
+
+GROUP = 256          # tokens per dispatch group
+
+
+def moe_pspecs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, e, f = cfg.d_model, cfg.layout_n_experts, cfg.moe_ff
+    return {
+        "router": PSpec((d, e), ("embed", None)),
+        "w_gate": PSpec((e, d, f), ("experts", "embed", "mlp")),
+        "w_up": PSpec((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": PSpec((e, f, d), ("experts", "mlp", "embed"),
+                        scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _n_groups(t: int, dp: int) -> int:
+    """Group count: a multiple of the dp degree (so groups shard evenly)
+    with ~GROUP tokens per group."""
+    if t % dp != 0:
+        dp = 1
+    per_shard = t // dp
+    g = dp * max(1, per_shard // GROUP)
+    while t % g != 0:
+        g -= 1
+    return max(1, g)
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig,
+            shd=NOSHARD) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,D] -> (out [B,S,D], aux loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.layout_n_experts, cfg.top_k
+    dp = getattr(shd, "dp_size", lambda: 1)()
+    ng = _n_groups(t, dp)
+    group = t // ng
+    capacity = max(4, int(math.ceil(group * k / cfg.n_experts
+                                    * cfg.capacity_factor)))
+
+    xg = x.reshape(ng, group, d)
+    xg = shd(xg, "moe_groups", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    if e != cfg.n_experts:
+        # padded experts (expert-parallel layout): never routable
+        pad_mask = jnp.where(jnp.arange(e) < cfg.n_experts, 0.0, -1e9)
+        logits = logits + pad_mask
+    probs = jax.nn.softmax(logits, axis=-1)                 # [G,t,E]
+    top_p, top_i = jax.lax.top_k(probs, k)                  # [G,t,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    counts = jnp.zeros((ng, 1, e), jnp.float32)             # used capacity
+    dispatch = jnp.zeros((ng, group, e, capacity), jnp.float32)
+    combine = jnp.zeros((ng, group, e, capacity), jnp.float32)
+    for j in range(k):                                      # sequential slots
+        oh = jax.nn.one_hot(top_i[:, :, j], e, dtype=jnp.float32)  # [G,t,E]
+        pos = counts + jnp.cumsum(oh, axis=1) - oh          # [G,t,E]
+        pos_j = jnp.sum(pos * oh, axis=-1)                  # [G,t]
+        keep = (pos_j < capacity).astype(jnp.float32)
+        pos_oh = jax.nn.one_hot(pos_j.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)          # [G,t,C]
+        disp = jnp.einsum("gte,gtc,gt->gtec", oh, pos_oh, keep)
+        dispatch = dispatch + disp
+        combine = combine + disp * (top_p[:, :, j] * keep)[..., None, None]
+        counts = counts + jnp.sum(oh * keep[..., None], axis=1,
+                                  keepdims=True)
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    xin = shd(xin, "moe_groups", None, None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    h = shd(h, "moe_groups", None, None, "mlp")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), y)
+    # load-balance auxiliary loss (Switch eq. 4)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i, e, dtype=jnp.float32).sum(axis=2),
+        axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) / k
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD) block — the sequence mixer of the zamba2 hybrid.
+
+Training/prefill runs the chunked SSD algorithm: quadratic attention-like
+computation inside fixed-size chunks, a linear recurrence across chunk
+boundaries (lax.scan).  All exponentials are of non-positive arguments
+(within-chunk decays), so the chunked form is numerically safe at any
+chunk size.  Decode is the O(1) recurrent update.
+
+State per sequence: ssm state [H, head_dim, N] + conv ring buffer — this
+is what ``core/sizing.recurrent_state_bytes`` budgets (the paper's sizing
+engine extended to attention-free mixers, DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import NOSHARD, PSpec, rms_norm
+
+CHUNK = 64
+
+
+def mamba_pspecs(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    kw = cfg.ssm_conv
+    return {
+        "w_z": PSpec((d, di), ("embed", "inner")),
+        "w_x": PSpec((d, di), ("embed", "inner")),
+        "w_B": PSpec((d, n), ("embed", None)),
+        "w_C": PSpec((d, n), ("embed", None)),
+        "w_dt": PSpec((d, h), ("embed", "heads")),
+        "conv_x": PSpec((kw, di), (None, "inner"), scale=0.2),
+        "conv_B": PSpec((kw, n), (None, None), scale=0.2),
+        "conv_C": PSpec((kw, n), (None, None), scale=0.2),
+        "A_log": PSpec((h,), ("heads",), init="zeros"),
+        "D": PSpec((h,), ("heads",), init="ones"),
+        "dt_bias": PSpec((h,), ("heads",), init="zeros"),
+        "norm": PSpec((di,), ("inner",), init="ones"),
+        "w_out": PSpec((di, d), ("inner", "embed"),
+                       scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """x [B,S,C], kernel [K,C] -> causal depthwise conv [B,S,C]."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    parts = [xp[:, i:i + x.shape[1], :] * kernel[i] for i in range(k)]
+    return sum(parts)
+
+
+def _conv_step(state: jax.Array, xt: jax.Array,
+               kernel: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """state [B,K-1,C], xt [B,C] -> (new_state, y [B,C])."""
+    k = kernel.shape[0]
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)   # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, kernel)
+    return window[:, 1:, :], y
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                c_in: jax.Array, *, chunk: int = CHUNK,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,H,P], dt [B,S,H] (>0), a [H] (<0), b_in/c_in [B,S,N].
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b_in.reshape(bsz, nc, chunk, n)
+    cr = c_in.reshape(bsz, nc, chunk, n)
+
+    da = dtr * a                                   # [b,nc,c,h] (<= 0)
+    cum = jnp.cumsum(da, axis=2)                   # inclusive
+    # ---- intra-chunk (quadratic within chunk) ----
+    li = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [b,nc,i,j,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    li = jnp.where(mask[None, None, :, :, None], li, 0.0)
+    scores = jnp.einsum("bzin,bzjn->bzij", cr, br).astype(jnp.float32)
+    wx = (dtr[..., None] * xr).astype(jnp.float32)               # dt_j B_j x_j
+    y_intra = jnp.einsum("bzij,bzijh,bzjhp->bzihp",
+                         scores, li, wx)
+    # ---- chunk states ----
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # [b,nc,c,h]
+    states = jnp.einsum("bzch,bzcn,bzchp->bzhpn",
+                        (decay_end * dtr).astype(jnp.float32), br, xr)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        st, dec = inp                              # [b,h,p,n], [b,h]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                          # emit state ENTERING chunk
+
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, entering = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)   # [b,nc,h,p,n]
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bzin,bzhpn->bzihp", cr, entering) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def ssd_step(state: jax.Array, xt: jax.Array, dt: jax.Array, a: jax.Array,
+             bt: jax.Array, ct: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """O(1) decode: state [B,H,P,N], xt [B,H,P], dt [B,H], bt/ct [B,N]."""
+    dec = jnp.exp(dt * a)                                        # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xt, bt)
+    new_state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, ct)
+    return new_state, y
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def mamba_block(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                shd=NOSHARD) -> jax.Array:
+    """Training/prefill path. x [B,S,D] -> [B,S,D]."""
+    bsz, s, d = x.shape
+    h, hd, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xs = _causal_conv(jnp.einsum("bsd,di->bsi", x, p["w_x"]), p["conv_x"])
+    xs = shd(jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype),
+             "batch", "seq", "inner")
+    b_in = _causal_conv(jnp.einsum("bsd,dn->bsn", x, p["w_B"]), p["conv_B"])
+    c_in = _causal_conv(jnp.einsum("bsd,dn->bsn", x, p["w_C"]), p["conv_C"])
+    b_in = jax.nn.silu(b_in.astype(jnp.float32))
+    c_in = jax.nn.silu(c_in.astype(jnp.float32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, s, h, hd)
+    y, _ = ssd_chunked(xh, dt, a, b_in, c_in)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+def mamba_decode_step(p: Dict, xt: jax.Array, state: Dict, cfg: ModelConfig,
+                      *, shd=NOSHARD) -> Tuple[jax.Array, Dict]:
+    """xt [B,D]; state {ssm [B,H,P,N], conv_x [B,K-1,di],
+    conv_B/conv_C [B,K-1,N]} -> (y [B,D], new state)."""
+    bsz, d = xt.shape
+    h, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bd,di->bi", xt, p["w_z"])
+    cx, xc = _conv_step(state["conv_x"],
+                        jnp.einsum("bd,di->bi", xt, p["w_x"]), p["conv_x"])
+    cb, bc = _conv_step(state["conv_B"],
+                        jnp.einsum("bd,dn->bn", xt, p["w_B"]), p["conv_B"])
+    cc, cc_in = _conv_step(state["conv_C"],
+                           jnp.einsum("bd,dn->bn", xt, p["w_C"]), p["conv_C"])
+    xs = jax.nn.silu(xc.astype(jnp.float32)).astype(xt.dtype)
+    b_in = jax.nn.silu(bc.astype(jnp.float32))
+    c_in = jax.nn.silu(cc_in.astype(jnp.float32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", xt, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, h, hd)
+    new_ssm, y = ssd_step(state["ssm"].astype(jnp.float32), xh, dt, a,
+                          b_in, c_in)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, cfg.d_inner).astype(xt.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(xt.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"])
+    new_state = {"ssm": new_ssm.astype(state["ssm"].dtype),
+                 "conv_x": cx, "conv_B": cb, "conv_C": cc}
+    return out, new_state
+
+
+def mamba_state_pspecs(cfg: ModelConfig, batch: int) -> Dict[str, PSpec]:
+    h, hd, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    k, di = cfg.ssm_conv, cfg.d_inner
+    return {
+        "ssm": PSpec((batch, h, hd, n), ("batch", "heads", None, None),
+                     init="zeros"),
+        "conv_x": PSpec((batch, k - 1, di), ("batch", None, "inner"),
+                        init="zeros"),
+        "conv_B": PSpec((batch, k - 1, n), ("batch", None, None),
+                        init="zeros"),
+        "conv_C": PSpec((batch, k - 1, n), ("batch", None, None),
+                        init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# reference (sequential) oracle for tests
+# ---------------------------------------------------------------------------
+def ssd_reference(x, dt, a, b_in, c_in):
+    """Token-by-token recurrence; slow but obviously correct."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        state, y = ssd_step(state, x[:, t].astype(jnp.float32), dt[:, t], a,
+                            b_in[:, t], c_in[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype), state

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, EngineConfig
+from repro.serving.request import Request, SamplingParams, Phase
+from repro.serving.scheduler import Scheduler, SchedulerConfig

@@ -1,0 +1,263 @@
+"""The serving engine: continuous batching over a slot KV cache, with the
+paper's predictive multi-tier cache manager on the prompt-block level.
+
+Per step:
+  1. admit waiting requests into free slots — radix-tree prefix match
+     fetches reusable KV blocks from whatever tier holds them (hit
+     accounting per (block-type, transition)), then prefill runs only on
+     the unmatched suffix;
+  2. one batched decode_step over all active slots; sample next tokens;
+  3. finished requests release their blocks (refcounted; reusable blocks
+     linger per predicted reuse probability);
+  4. agentic tool switches update the Markov predictor and trigger
+     §III-G pre-allocation and head-multiplier hooks;
+  5. stragglers are preempted: their slot KV is demoted into the tier
+     hierarchy and restored on resume.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MLA, ModelConfig
+from repro.core import sizing
+from repro.core.cache_manager import PredictiveCacheManager
+from repro.core.tiers import TPU_V5E_TIER_SPECS, TierSpec
+from repro.models.model import build_model
+from repro.serving import sampler as sampler_mod
+from repro.serving.kvcache import SlotKVCache
+from repro.serving.request import Phase, Request, SamplingParams
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclass
+class EngineConfig:
+    max_len: int = 512
+    kv_budget_bytes: float = float(1 << 30)
+    policy: str = "bayesian"
+    enable_dedup: bool = True
+    enable_prefetch: bool = True
+    enable_multi_tier: bool = True
+    status_quo_sizing: bool = False
+    deadline_s: float = 600.0
+    seed: int = 0
+    tier_specs: Tuple[TierSpec, ...] = TPU_V5E_TIER_SPECS
+    pad_prefill_to: int = 32          # bucket suffix lengths (jit cache)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = EngineConfig(),
+                 params=None, rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.model = build_model(cfg)
+        rng = jax.random.PRNGKey(engine_cfg.seed) if rng is None else rng
+        self.params = params if params is not None else \
+            self.model.init_params(rng)
+        self.scheduler = Scheduler(cfg, SchedulerConfig(
+            kv_budget_bytes=engine_cfg.kv_budget_bytes,
+            max_len=engine_cfg.max_len,
+            deadline_s=engine_cfg.deadline_s,
+            status_quo_sizing=engine_cfg.status_quo_sizing))
+        self.kv = SlotKVCache(self.model, self.scheduler.n_slots,
+                              engine_cfg.max_len)
+        # scale tier-0 capacity to the configured budget so eviction and
+        # tier demotion actually engage at live-test scale
+        specs = list(engine_cfg.tier_specs)
+        specs[0] = TierSpec(0, specs[0].name, specs[0].bandwidth,
+                            specs[0].latency, specs[0].cost_per_gb_hour,
+                            engine_cfg.kv_budget_bytes)
+        self.manager = PredictiveCacheManager(
+            cfg, specs=tuple(specs), policy=engine_cfg.policy,
+            enable_dedup=engine_cfg.enable_dedup,
+            enable_prefetch=engine_cfg.enable_prefetch,
+            enable_multi_tier=engine_cfg.enable_multi_tier)
+        self._rng = jax.random.PRNGKey(engine_cfg.seed + 1)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(self.model.prefill)
+        self._preempted_payloads: Dict[int, Tuple[np.ndarray, int]] = {}
+        self._session_tool: Dict[str, Optional[str]] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], *, params: SamplingParams = None,
+               session_id: str = None, block_type: str = "user_context",
+               tool: str = None) -> Request:
+        req = Request(prompt=list(prompt),
+                      params=params or SamplingParams(),
+                      session_id=session_id, block_type=block_type,
+                      tool=tool)
+        pad = self.ecfg.pad_prefill_to
+        need = ((req.prompt_len + pad - 1) // pad) * pad \
+            + req.params.max_new_tokens + 1
+        if need > self.ecfg.max_len:
+            raise ValueError(
+                f"request needs {need} cache slots > max_len "
+                f"{self.ecfg.max_len} (prompt {req.prompt_len} + "
+                f"max_new {req.params.max_new_tokens})")
+        self.scheduler.submit(req)
+        return req
+
+    # ------------------------------------------------------------------
+    # admission: prefix reuse + suffix prefill
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int) -> None:
+        mgr = self.manager
+        bt = mgr.block_tokens
+        transition = "reasoning_step"
+        if req.tool is not None:
+            prev = self._session_tool.get(req.session_id)
+            transition = mgr.on_tool_switch(prev, req.tool,
+                                            kv_bytes=sizing.decode_state_bytes(
+                                                self.cfg, req.prompt_len))
+            self._session_tool[req.session_id] = req.tool
+
+        # restore a preempted request wholesale
+        if req.request_id in self._preempted_payloads:
+            payload, length = self._preempted_payloads.pop(req.request_id)
+            self.kv.restore_slot(slot, payload, length)
+            self.scheduler.start(req, slot)
+            return
+
+        # prefill covers prompt[:-1]; the first decode step consumes the
+        # final prompt token (so prefill logits are never needed and pad
+        # positions never produce the sampled token)
+        effective = req.prompt[:-1]
+        matched = mgr.match_prefix(effective)
+        payloads: List[np.ndarray] = []
+        for bid in matched:
+            res = mgr.access(bid, transition=transition)
+            pl = mgr._payloads.get(bid)
+            if pl is None or res.recomputed:
+                break                      # payload lost -> recompute rest
+            payloads.append(pl)
+        prefix_len = len(payloads) * bt
+        req.prefix_hit_blocks = len(payloads)
+        if payloads:
+            self.kv.inject_blocks(slot, payloads, bt)
+
+        # prefill the unmatched suffix
+        suffix = list(effective[prefix_len:])
+        pad = self.ecfg.pad_prefill_to
+        padded_len = max(pad, ((len(suffix) + pad - 1) // pad) * pad)
+        toks = jnp.asarray(
+            [suffix + [0] * (padded_len - len(suffix))], jnp.int32)
+        if prefix_len == 0:
+            logits, state1 = self._prefill(self.params, {"tokens": toks})
+            self.kv.write_prefill(slot, state1, padded_len)
+        else:
+            prefix_kv = self.kv.prefix_kv(slot, prefix_len)
+            logits, suffix_kv = self.model.prefill_suffix(
+                self.params, {"tokens": toks}, prefix_kv, prefix_len)
+            state1 = (dict(latent=suffix_kv[0])
+                      if self.cfg.attention_variant == MLA
+                      else dict(k=suffix_kv[0], v=suffix_kv[1]))
+            # place suffix KV after the prefix
+            if self.cfg.attention_variant == MLA:
+                self.kv.state["latent"] = self.kv.state["latent"].at[
+                    :, slot, prefix_len:prefix_len + padded_len].set(
+                    state1["latent"][:, 0])
+            else:
+                self.kv.state["k"] = self.kv.state["k"].at[
+                    :, slot, prefix_len:prefix_len + padded_len].set(
+                    state1["k"][:, 0])
+                self.kv.state["v"] = self.kv.state["v"].at[
+                    :, slot, prefix_len:prefix_len + padded_len].set(
+                    state1["v"][:, 0])
+        # true sequence length (padding tokens are masked by length)
+        self.kv.set_length(slot, len(effective))
+
+        # register this prompt's full blocks with the manager
+        n_full = (len(effective) // bt) * bt
+        new_ids = mgr.register_sequence(
+            list(effective[:n_full]), block_type=req.block_type,
+            recompute_cost_per_block=self._block_recompute_cost())
+        for i, bid in enumerate(new_ids[len(payloads):], start=len(payloads)):
+            mgr._payloads[bid] = self.kv.extract_block(slot, i * bt, bt)
+        req.block_ids = new_ids
+        self.scheduler.start(req, slot)
+
+    def _block_recompute_cost(self) -> float:
+        """Seconds to re-prefill one block on the target chip."""
+        flops = 2 * self.cfg.active_param_count() * self.manager.block_tokens
+        return flops / 197e12
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration; returns #tokens generated."""
+        sch = self.scheduler
+        # straggler handling
+        for req in sch.check_stragglers():
+            self.preempt(req)
+        # admission
+        for req in sch.admissible(len(self.kv.free_slots())):
+            slot = self.kv.acquire(req.request_id, req.prompt_len)
+            self._admit(req, slot)
+        if not sch.running:
+            return 0
+        # batched decode over all slots
+        tokens = np.zeros((self.kv.n_slots,), np.int32)
+        for req in sch.running.values():
+            last = (req.generated[-1] if req.generated
+                    else req.prompt[-1])
+            tokens[req.slot] = last
+        self._rng, step_rng = jax.random.split(self._rng)
+        logits, self.kv.state = self._decode(
+            self.params, self.kv.state, jnp.asarray(tokens))
+        produced = 0
+        now = time.monotonic()
+        by_slot = {r.slot: r for r in sch.running.values()}
+        # per-request sampling (params differ per request)
+        logits_np = None
+        for slot, req in sorted(by_slot.items()):
+            self._rng, r = jax.random.split(self._rng)
+            tok = sampler_mod.sample(
+                logits[slot:slot + 1], r,
+                temperature=req.params.temperature,
+                top_k=req.params.top_k, top_p=req.params.top_p)
+            req.generated.append(int(tok[0]))
+            if req.t_first_token is None:
+                req.t_first_token = now
+            produced += 1
+            self.kv.slots[slot].length += 1
+            # RoPE prefetch hook: promote blocks around the decode position
+            if req.block_ids:
+                self.manager.prefetch_for_position(
+                    req.block_ids, self.kv.slots[slot].length)
+        # lengths already advanced inside decode_step state; sync infos
+        for slot, req in by_slot.items():
+            if req.finished() or req.total_len >= self.ecfg.max_len - 1:
+                self.manager.release_sequence(req.block_ids)
+                sch.finish(req)
+                self.kv.release(req.slot)
+        self.manager.tick()
+        self.manager.age_all()
+        self.steps += 1
+        return produced
+
+    def preempt(self, req: Request) -> None:
+        """Demote a running request's KV into the tier hierarchy."""
+        payload, length = self.kv.evict_slot_to_payload(req.slot)
+        self._preempted_payloads[req.request_id] = (payload, length)
+        # account the demotion as tier-1 writes
+        self.manager.hierarchy[1].write(
+            f"preempt-{req.request_id}", payload,
+            nbytes=float(payload.nbytes))
+        self.kv.release(req.slot)
+        self.scheduler.preempt(req)
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 10_000) -> dict:
+        while self.scheduler.has_work() and self.steps < max_steps:
+            self.step()
+        return self.stats()
+
+    def stats(self) -> dict:
+        return {"scheduler": self.scheduler.stats(),
+                "cache": self.manager.metrics(),
+                "steps": self.steps}

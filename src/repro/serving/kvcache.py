@@ -1,0 +1,121 @@
+"""Slot-based KV cache for the live engine + block payload conversion.
+
+The live (CPU/TPU-host) engine decodes from a contiguous per-slot cache
+(the Model decode API); the paper's multi-tier block machinery operates on
+*prompt-prefix blocks*: after prefill, each 128-token block of a prompt's
+KV state is registered with the PredictiveCacheManager (payload = host
+numpy), enabling cross-request prefix reuse, preemption/restore and tier
+demotion.  On TPU the ragged decode fast path is the paged-attention
+Pallas kernel (kernels/paged_attention.py); block tables map 1:1 onto
+this block layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MLA, ModelConfig
+from repro.models.model import Model
+
+
+@dataclass
+class SlotInfo:
+    request_id: int = -1
+    length: int = 0
+    active: bool = False
+
+
+class SlotKVCache:
+    """Fixed decode slots over the model's contiguous DecodeState."""
+
+    def __init__(self, model: Model, n_slots: int, max_len: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.state = model.init_decode_state(n_slots, max_len)
+        self.slots = [SlotInfo() for _ in range(n_slots)]
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def acquire(self, request_id: int, length: int) -> int:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                self.slots[i] = SlotInfo(request_id, length, True)
+                return i
+        raise RuntimeError("no free slot")
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = SlotInfo()
+        self.state["lengths"] = self.state["lengths"].at[slot].set(0)
+
+    def set_length(self, slot: int, length: int) -> None:
+        self.slots[slot].length = length
+        self.state["lengths"] = self.state["lengths"].at[slot].set(length)
+
+    # ------------------------------------------------------------------
+    # moving KV between the slot cache and block payloads (numpy)
+    # ------------------------------------------------------------------
+    def write_prefill(self, slot: int, state1: Dict, length: int) -> None:
+        """Copy a batch-1 prefill state into slot `slot`."""
+        if self.cfg.attention_variant == MLA:
+            self.state["latent"] = self.state["latent"].at[
+                :, slot, :length].set(state1["latent"][:, 0, :length])
+        else:
+            self.state["k"] = self.state["k"].at[:, slot, :length].set(
+                state1["k"][:, 0, :length])
+            self.state["v"] = self.state["v"].at[:, slot, :length].set(
+                state1["v"][:, 0, :length])
+        self.set_length(slot, length)
+
+    def extract_block(self, slot: int, start: int, n_tokens: int) -> np.ndarray:
+        """Slot KV -> block payload [2, L, n_tokens, H, hd] (or MLA
+        [1, L, n_tokens, dl+dr])."""
+        if self.cfg.attention_variant == MLA:
+            lat = self.state["latent"][:, slot, start:start + n_tokens]
+            return np.asarray(lat)[None]
+        k = np.asarray(self.state["k"][:, slot, start:start + n_tokens])
+        v = np.asarray(self.state["v"][:, slot, start:start + n_tokens])
+        return np.stack([k, v])
+
+    def inject_blocks(self, slot: int, payloads: Sequence[np.ndarray],
+                      block_tokens: int) -> int:
+        """Write reused prefix blocks into a slot; returns prefix length."""
+        pos = 0
+        for pl in payloads:
+            n = pl.shape[2]
+            if self.cfg.attention_variant == MLA:
+                self.state["latent"] = self.state["latent"].at[
+                    :, slot, pos:pos + n].set(jnp.asarray(pl[0]))
+            else:
+                self.state["k"] = self.state["k"].at[
+                    :, slot, pos:pos + n].set(jnp.asarray(pl[0]))
+                self.state["v"] = self.state["v"].at[
+                    :, slot, pos:pos + n].set(jnp.asarray(pl[1]))
+            pos += n
+        return pos
+
+    def prefix_kv(self, slot: int, length: int):
+        """Cached prefix (k, v) for suffix-prefill, batch dim restored."""
+        if self.cfg.attention_variant == MLA:
+            return (self.state["latent"][:, slot:slot + 1, :length],)
+        return (self.state["k"][:, slot:slot + 1, :length],
+                self.state["v"][:, slot:slot + 1, :length])
+
+    # ------------------------------------------------------------------
+    def evict_slot_to_payload(self, slot: int) -> Tuple[np.ndarray, int]:
+        """Preemption: extract the whole slot state for tier demotion."""
+        length = self.slots[slot].length
+        payload = self.extract_block(slot, 0, length)
+        return payload, length
+
+    def restore_slot(self, slot: int, payload: np.ndarray,
+                     length: int) -> None:
+        self.inject_blocks(slot, [payload], length)
+        self.set_length(slot, length)

@@ -1,0 +1,68 @@
+"""Request / session types for the serving engine."""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Sequence
+
+_ids = itertools.count()
+
+
+class Phase(Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    PREEMPTED = "preempted"
+    DONE = "done"
+
+
+@dataclass
+class SamplingParams:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 -> greedy
+    top_k: int = 0
+    top_p: float = 1.0
+    stop_token: Optional[int] = None
+
+
+@dataclass
+class Request:
+    prompt: Sequence[int]
+    params: SamplingParams = field(default_factory=SamplingParams)
+    session_id: Optional[str] = None
+    block_type: str = "user_context"   # semantic role of the prompt blocks
+    tool: Optional[str] = None         # agentic workloads: invoked tool
+    request_id: int = field(default_factory=lambda: next(_ids))
+    arrival: float = field(default_factory=time.monotonic)
+
+    # runtime state
+    phase: Phase = Phase.WAITING
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1                     # decode batch slot
+    block_ids: List[str] = field(default_factory=list)
+    prefix_hit_blocks: int = 0         # radix-matched blocks (skipped prefill)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    def finished(self) -> bool:
+        p = self.params
+        if len(self.generated) >= p.max_new_tokens:
+            return True
+        return (p.stop_token is not None and self.generated
+                and self.generated[-1] == p.stop_token)

@@ -1,0 +1,4 @@
+from repro.traces.generators import (GENERATORS, TraceConfig, BlockAccess,
+                                     sharegpt_trace, lmsys_trace,
+                                     agentic_trace)
+from repro.traces.replay import replay, run_table_v, ReplayResult

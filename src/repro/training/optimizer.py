@@ -1,0 +1,89 @@
+"""AdamW with fp32 master weights (pure JAX, no optax dependency).
+
+Optimizer state holds fp32 master params + first/second moments; model
+params stay bf16 for compute.  Under the distributed train step the
+moments and master copy are additionally sharded over the data axis
+(ZeRO-1) via ``distributed.sharding.zero1_shardings``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to 10%."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init_state(params: Any) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      master=jax.tree.map(f32, params),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params: Any, grads: Any,
+                  state: AdamWState) -> Tuple[Any, AdamWState, Dict]:
+    """grads fp32, params bf16 -> (new params bf16, new state, metrics)."""
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, mast):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_mast = mast - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                + cfg.weight_decay * mast)
+        return m, v, new_mast
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mast: mast.astype(jnp.bfloat16), master)
+    new_state = AdamWState(step=step, master=master, m=m, v=v)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

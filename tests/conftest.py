@@ -1,0 +1,9 @@
+"""Tests and benches must see ONE device: the 512-device virtualization
+belongs exclusively to launch/dryrun.py (assignment requirement)."""
+import os
+
+
+def pytest_configure(config):
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "host_platform_device_count" not in flags, (
+        "XLA_FLAGS device-count virtualization must not leak into tests")

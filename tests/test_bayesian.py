@@ -1,0 +1,97 @@
+"""Beta-posterior predictor: math, convergence, blending, properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bayesian import (BLOCK_TYPES, TRANSITION_TYPES,
+                                 BayesianReusePredictor, BetaPosterior)
+
+
+def test_sixteen_pairs():
+    p = BayesianReusePredictor()
+    assert len(p._post) == len(BLOCK_TYPES) * len(TRANSITION_TYPES) == 16
+
+
+def test_posterior_mean_updates():
+    post = BetaPosterior()
+    assert post.mean == 0.5
+    post.update(True)
+    assert post.mean == pytest.approx(2 / 3)
+    post.update(False)
+    assert post.mean == pytest.approx(0.5)
+
+
+def test_convergence_within_500_observations():
+    """Paper SVE: (system_prompt, same_tool_repeat) converges to
+    alpha/(alpha+beta) > 0.97 within 500 observations."""
+    p = BayesianReusePredictor()
+    for i in range(500):
+        p.observe("system_prompt", "same_tool_repeat", i % 100 != 0)
+    assert p.posterior_mean("system_prompt", "same_tool_repeat") > 0.97
+
+
+def test_confidence_saturates():
+    p = BayesianReusePredictor(confidence_k=20)
+    assert p.confidence("user_context", "reasoning_step") == 0.0
+    for _ in range(1000):
+        p.observe("user_context", "reasoning_step", True)
+    assert p.confidence("user_context", "reasoning_step") > 0.95
+
+
+def test_blending_prefers_empirical_when_young():
+    p = BayesianReusePredictor(confidence_k=50, window=8)
+    # 4 recent misses on a fresh pair: empirical (0) should dominate
+    for _ in range(4):
+        p.observe("tool_context", "agent_handoff", False)
+    blended = p.reuse_probability("tool_context", "agent_handoff")
+    posterior = p.posterior_mean("tool_context", "agent_handoff")
+    assert blended < posterior
+
+
+def test_prior_overwhelmed_within_100_obs():
+    """Paper Table IX: biased priors converge within 100 observations."""
+    biased = BayesianReusePredictor(prior_alpha=9.0, prior_beta=1.0)
+    flat = BayesianReusePredictor()
+    for _ in range(100):
+        biased.observe("user_context", "tool_switch", False)
+        flat.observe("user_context", "tool_switch", False)
+    a = biased.posterior_mean("user_context", "tool_switch")
+    b = flat.posterior_mean("user_context", "tool_switch")
+    assert abs(a - b) < 0.08
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_posterior_in_unit_interval_and_consistent(events):
+    p = BayesianReusePredictor()
+    for e in events:
+        p.observe("user_context", "reasoning_step", e)
+    m = p.posterior_mean("user_context", "reasoning_step")
+    assert 0.0 < m < 1.0
+    expected = (1 + sum(events)) / (2 + len(events))
+    assert m == pytest.approx(expected)
+    assert 0.0 <= p.reuse_probability("user_context",
+                                      "reasoning_step") <= 1.0
+
+
+def test_state_roundtrip():
+    p = BayesianReusePredictor()
+    for i in range(50):
+        p.observe("system_prompt", "tool_switch", i % 2 == 0)
+    q = BayesianReusePredictor()
+    q.load_state_dict(p.state_dict())
+    assert q.posterior_mean("system_prompt", "tool_switch") == \
+        p.posterior_mean("system_prompt", "tool_switch")
+
+
+def test_thompson_sampler_concentrates():
+    from repro.core.bayesian import ThompsonSampler
+    p = BayesianReusePredictor()
+    for _ in range(500):
+        p.observe("system_prompt", "same_tool_repeat", True)
+    ts = ThompsonSampler(p, seed=1)
+    draws = [ts.sample_reuse("system_prompt", "same_tool_repeat")
+             for _ in range(100)]
+    assert min(draws) > 0.9            # posterior concentrated near 1
+    fresh = [ts.sample_reuse("tool_context", "agent_handoff")
+             for _ in range(100)]
+    assert max(fresh) - min(fresh) > 0.5   # prior stays exploratory

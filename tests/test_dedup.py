@@ -1,0 +1,71 @@
+"""Content store, radix tree (vs dict oracle), delta checkpoints."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dedup import (CheckpointManifest, ContentStore, RadixTree,
+                              content_hash, delta_checkpoint)
+
+
+def test_refcounting():
+    s = ContentStore()
+    a, dup = s.intern("h1", "blk0")
+    assert not dup and a == "blk0"
+    b, dup = s.intern("h1", "blk1")
+    assert dup and b == "blk0"
+    assert s.refcount("blk0") == 2
+    assert s.release("h1") is None          # one ref remains
+    assert s.release("h1") == "blk0"        # freed
+
+
+def test_radix_prefix_match():
+    t = RadixTree(4)
+    t.insert(list(range(12)), ["a", "b", "c"])
+    assert t.match(list(range(12))) == ["a", "b", "c"]
+    assert t.match(list(range(8)) + [99, 98, 97, 96]) == ["a", "b"]
+    assert t.match([5, 6, 7, 8]) == []
+    t.remove_block("b")
+    assert t.match(list(range(12))) == ["a"]
+
+
+@given(st.lists(st.lists(st.integers(0, 3), min_size=0, max_size=24),
+                min_size=1, max_size=24))
+@settings(max_examples=40, deadline=None)
+def test_radix_vs_oracle(seqs):
+    """Longest block-aligned shared prefix == brute-force oracle."""
+    bt = 4
+    t = RadixTree(bt)
+    inserted = []
+    for i, s in enumerate(seqs):
+        n = (len(s) // bt) * bt
+        ids = [f"s{i}b{j}" for j in range(n // bt)]
+        t.insert(s, ids)
+        inserted.append((tuple(s[:n]), ids))
+    probe = seqs[0]
+    got = t.match(probe)
+    # oracle: longest matching block-prefix over all inserted sequences
+    best = 0
+    n = (len(probe) // bt) * bt
+    for toks, ids in inserted:
+        m = 0
+        while (m + 1) * bt <= min(len(toks), n) and \
+                tuple(probe[m * bt:(m + 1) * bt]) == \
+                toks[m * bt:(m + 1) * bt]:
+            m += 1
+        best = max(best, m)
+    assert len(got) == best
+
+
+def test_content_hash_distinguishes_models():
+    assert content_hash([1, 2, 3], salt="a") != \
+        content_hash([1, 2, 3], salt="b")
+    assert content_hash([1, 2, 3]) == content_hash([1, 2, 3])
+
+
+def test_delta_checkpoint_counts_every_appearance():
+    s = ContentStore()
+    blocks = [("h1", 10.0), ("h2", 10.0), ("h1", 10.0), ("h1", 10.0)]
+    m = delta_checkpoint(blocks, s)
+    assert m.written_bytes == 20.0
+    assert m.raw_bytes == 40.0
+    assert m.savings == pytest.approx(0.5)

@@ -1,0 +1,106 @@
+"""Head tracker, eviction policies, prefetcher, Markov predictor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import reduce_config
+from repro.configs import get_config
+from repro.configs.paper_models import DEEPSEEK_V3, LLAMA3_70B
+from repro.core.agentic import (MarkovToolPredictor, SessionFeatures,
+                                classify_session)
+from repro.core.eviction import (BayesianPolicy, BlockMeta, EMAPolicy,
+                                 HeadImportanceTracker, LRUPolicy)
+from repro.core.prefetch import RoPEPrefetcher
+
+
+def test_head_tracker_gqa_grouping():
+    t = HeadImportanceTracker(LLAMA3_70B)          # 64 q heads, 8 kv
+    assert t.n_tracked == 8
+    mass = np.zeros(64)
+    mass[5] = 1.0                                  # q head 5 -> kv head 0
+    t.update(0, mass)
+    assert t.matrix[0, 0] > t.matrix[0, 1]
+
+
+def test_head_tracker_mla_collapses():
+    t = HeadImportanceTracker(DEEPSEEK_V3)
+    assert t.n_tracked == 1
+    assert t.matrix.shape == (61, 1)
+
+
+def test_lru_orders_by_recency():
+    p = LRUPolicy()
+    metas = [BlockMeta(f"b{i}", 1.0, last_access=float(i))
+             for i in range(5)]
+    assert p.select_victim(metas, 10.0).block_id == "b0"
+    assert [m.block_id for m in p.select_victims(metas, 10.0, 2)] == \
+        ["b0", "b1"]
+
+
+def test_bayesian_policy_pins_predicted_reuse():
+    p = BayesianPolicy(horizon=100.0)
+    old_sys = BlockMeta("sys", 1.0, last_access=0.0, reuse_prob=0.95,
+                        recompute_cost=0.0)
+    fresh_scratch = BlockMeta("scratch", 1.0, last_access=50.0,
+                              reuse_prob=0.02, recompute_cost=0.0)
+    # despite being 50 ticks fresher, scratch is evicted first
+    assert p.select_victim([old_sys, fresh_scratch], 60.0).block_id == \
+        "scratch"
+
+
+def test_pinned_never_selected():
+    p = LRUPolicy()
+    metas = [BlockMeta("a", 1.0, last_access=0.0, pinned=True),
+             BlockMeta("b", 1.0, last_access=9.0)]
+    assert p.select_victim(metas, 10.0).block_id == "b"
+
+
+def test_prefetcher_window_covers_positions():
+    pf = RoPEPrefetcher(block_tokens=128, n_layers=4, base_window=512)
+    blocks = [f"b{i}" for i in range(64)]
+    reqs = pf.plan(blocks, position=1000, resident=lambda b: False)
+    ids = [int(r.block_id[1:]) for r in reqs]
+    assert min(ids) == 1000 // 128
+    assert max(ids) >= (1000 + 256) // 128
+    # adaptation: misses shrink the window
+    w0 = pf.window
+    for _ in range(10):
+        pf.feedback(False)
+    assert pf.window < w0
+
+
+def test_layer_window_monotone():
+    pf = RoPEPrefetcher(128, n_layers=8)
+    assert pf.layer_window(0) < pf.layer_window(7)
+
+
+@given(st.lists(st.sampled_from(["a", "b", "c", "agent:x"]),
+                min_size=2, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_markov_rows_sum_to_one(seq):
+    m = MarkovToolPredictor()
+    prev = None
+    for t in seq:
+        m.observe_transition(prev, t, kv_bytes=100.0)
+        prev = t
+    for t in set(seq):
+        probs = m.transition_probs(t)
+        assert sum(probs.values()) == pytest.approx(1.0)
+        assert all(0 <= v <= 1 for v in probs.values())
+
+
+def test_markov_learns_dominant_transition():
+    m = MarkovToolPredictor()
+    for _ in range(20):
+        m.observe_transition("search", "fetch", kv_bytes=10.0)
+    m.observe_transition("search", "calc", kv_bytes=10.0)
+    assert m.predict_next("search", 1)[0][0] == "fetch"
+    assert m.transition_type("search", "search") == "same_tool_repeat"
+    assert m.transition_type("search", "agent:r") == "agent_handoff"
+
+
+def test_session_classification_monotone():
+    light = classify_session(SessionFeatures(1000, 1, 1, 1e6))
+    heavy = classify_session(SessionFeatures(200_000, 20, 8, 64 * 1024 ** 3))
+    order = ["light", "medium", "heavy", "extreme"]
+    assert order.index(light) < order.index(heavy)

@@ -1,0 +1,32 @@
+"""Observability registry (paper §IV)."""
+from repro.configs.paper_models import LLAMA3_70B
+from repro.core.cache_manager import PredictiveCacheManager
+from repro.core.metrics import Registry, publish_manager
+from repro.traces.replay import replay_tier_specs
+
+
+def test_registry_expose_format():
+    r = Registry()
+    r.gauge("kv_tier_used_bytes", 123.0, {"tier": "gpu_hbm"},
+            help="bytes resident")
+    r.inc("requests_total", 2)
+    text = r.expose()
+    assert "# TYPE kv_tier_used_bytes gauge" in text
+    assert 'kv_tier_used_bytes{tier="gpu_hbm"} 123.0' in text
+    assert "requests_total 2.0" in text
+    assert r.get("requests_total") == 2.0
+
+
+def test_publish_manager_covers_paper_metrics():
+    mgr = PredictiveCacheManager(
+        LLAMA3_70B, specs=replay_tier_specs(LLAMA3_70B, hot_blocks=8,
+                                            t1_blocks=8))
+    bid, _ = mgr.register_block(list(range(128)),
+                                block_type="system_prompt")
+    mgr.access(bid, transition="same_tool_repeat")
+    reg = Registry()
+    publish_manager(reg, mgr)
+    text = reg.expose()
+    for metric in ("kv_cache_hit_rate_hot", "kv_tier_used_bytes",
+                   "kv_cache_cost_dollars", "kv_bayes_posterior_mean"):
+        assert metric in text

@@ -1,0 +1,131 @@
+"""Numerical consistency: decode-with-cache == teacher-forced forward;
+chunked sequence mixers == sequential oracles; MLA absorbed decode ==
+naive attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, reduce_config, FAMILY_DECODER
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models import attention as attn
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+
+
+def grow(state, n):
+    def f(k, x):
+        if k in ("k", "v", "latent"):
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, n - x.shape[2])
+            return jnp.pad(x, pad)
+        return x
+    return {k: f(k, v) for k, v in state.items()}
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-1.6b",
+                                  "zamba2-1.2b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(t[:k]) + decode steps == prefill(t[:k+j]) logits."""
+    cfg = reduce_config(get_config(arch))
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=40).tolist()
+    # reference: prefill over the longer prefix
+    lg_ref, _ = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks], jnp.int32)})
+    # candidate: prefill prefix, then decode the remaining tokens
+    k = 32
+    lg, state = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks[:k]], jnp.int32)})
+    if "k" in state or "latent" in state:
+        state = grow(state, 64)
+    for t in toks[k:]:
+        lg, state = jax.jit(m.decode_step)(
+            params, state, jnp.asarray([t], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               rtol=0.05, atol=0.15)
+
+
+def test_ssd_chunked_vs_reference():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 96, 3, 8, 4
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y1, s1 = ssm_mod.ssd_chunked(x, dt, a, B, C, chunk=32)
+    y2, s2 = ssm_mod.ssd_reference(x, dt, a, B, C)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunked_vs_reference():
+    rng = np.random.default_rng(1)
+    b, s, h, dk = 2, 64, 2, 8
+    r = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    logw = -jnp.asarray(rng.uniform(0.001, 4.9, size=(b, s, h, dk)),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, dk)), jnp.float32)
+    y1, s1 = rwkv_mod.wkv_chunked(r, k, v, logw, u, chunk=16)
+    y2, s2 = rwkv_mod.wkv_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+
+
+def test_causal_attention_chunk_invariance():
+    rng = np.random.default_rng(2)
+    b, s, hq, hkv, hd = 2, 96, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    o1 = attn.causal_attention(q, k, v, chunk=32)
+    o2 = attn.causal_attention(q, k, v, chunk=96)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def test_mla_decode_matches_prefill_last_position():
+    """Absorbed decode == naive prefill at the same position (MLA)."""
+    cfg = ModelConfig(name="mla-test", family=FAMILY_DECODER,
+                      n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      head_dim=16, d_ff=128, vocab_size=256,
+                      d_latent=32, d_rope=8)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 256, size=17).tolist()
+    lg_ref, _ = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks], jnp.int32)})
+    _, state = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks[:-1]], jnp.int32)})
+    state = grow(state, 32)
+    lg, _ = jax.jit(m.decode_step)(params, state,
+                                   jnp.asarray([toks[-1]], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               rtol=0.05, atol=0.15)
+
+
+def test_prefill_suffix_matches_full_prefill():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab_size, size=48).tolist()
+    lg_ref, state_ref = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks], jnp.int32)})
+    _, state = jax.jit(m.prefill)(
+        params, {"tokens": jnp.asarray([toks[:32]], jnp.int32)})
+    prefix = (state["k"], state["v"])
+    lg, (ks, vs) = m.prefill_suffix(
+        params, {"tokens": jnp.asarray([toks[32:]], jnp.int32)},
+        prefix, 32)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               rtol=0.05, atol=0.15)

@@ -1,0 +1,42 @@
+"""Analytical projection engine: anchor reproduction + monotonicity."""
+import pytest
+
+from repro.core.projection import (ANCHOR_TPUT, ANCHOR_TTFT_P99,
+                                   Projector)
+
+
+@pytest.fixture(scope="module")
+def proj():
+    return Projector()
+
+
+def test_gpu_only_anchors(proj):
+    r = proj.project(1, name="gpu-only")
+    assert r.tput_tok_s_gpu == pytest.approx(ANCHOR_TPUT)
+    assert r.ttft_p99 == pytest.approx(ANCHOR_TTFT_P99, rel=0.15)
+
+
+def test_tput_monotone_in_tiers(proj):
+    tputs = [proj.project(n).tput_tok_s_gpu for n in range(1, 7)]
+    assert all(b >= a - 1e-6 for a, b in zip(tputs, tputs[1:]))
+
+
+def test_full_system_in_paper_band(proj):
+    r = proj.project(6)
+    # paper: 1.7-2.9x throughput improvement; 4,150 tok/s/GPU
+    gain = r.tput_tok_s_gpu / ANCHOR_TPUT
+    assert 1.7 <= gain <= 3.1
+    assert 0.3 <= r.cost_per_mtok <= 0.7         # paper: $0.43
+
+
+def test_predictive_beats_reactive(proj):
+    pred = proj.project(6, predictive=True)
+    reac = proj.project(6, predictive=False)
+    assert pred.tput_tok_s_gpu > reac.tput_tok_s_gpu
+    assert pred.ttft_p99 < reac.ttft_p99
+
+
+def test_higher_hit_rate_helps(proj):
+    hi = proj.project(6, hit_rate=0.9)
+    lo = proj.project(6, hit_rate=0.5)
+    assert hi.tput_tok_s_gpu > lo.tput_tok_s_gpu

@@ -1,0 +1,89 @@
+"""Sharding rules, ZeRO-1 specs, and the HLO cost parser."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shlib
+from repro.launch import hlocost
+from repro.models.common import PSpec
+
+
+def test_logical_to_pspec():
+    rules = {"vocab": "model", "embed": None, "batch": ("pod", "data")}
+    ps = shlib.logical_to_pspec(("vocab", "embed"), rules)
+    assert ps == P("model")
+    ps = shlib.logical_to_pspec(("batch", None, "vocab"), rules)
+    assert ps == P(("pod", "data"), None, "model")
+
+
+def test_evenly_shardable_drops_indivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # 1-device mesh: everything trivially divisible
+    ps = shlib._evenly_shardable(P("model"), (10,), mesh)
+    assert ps == P("model")
+
+
+def test_zero1_shards_largest_free_dim():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ps = shlib.zero1_spec(P(None, "model"), (8, 16), mesh, axis="data")
+    assert ps == P("data", "model")
+
+
+SYNTH_HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+}
+"""
+
+
+def test_hlocost_trip_count_multiplies():
+    s = hlocost.analyze(SYNTH_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x5 trips
+    assert s.flops == pytest.approx(1024 * 5, rel=0.01)
+    # all-reduce wire at TPU-native width (f32 charged 2B):
+    # 2*(g-1)/g * 128B = 192B, x5 trips
+    assert s.wire_bytes == pytest.approx(192 * 5)
+    assert 5 in s.trip_counts.values()
+
+
+def test_hlocost_backend_config_trip():
+    hlo = SYNTH_HLO.replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+    s = hlocost.analyze(hlo)
+    assert s.flops == pytest.approx(1024 * 7, rel=0.01)
+
+
+def test_batch_shardings_replicate_small_batch():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
+    sh = shlib.batch_shardings(tree, mesh)
+    # batch=1 on size-1 axes: sharded-over-1 == replicated, both legal
+    assert sh["tokens"].spec in (P(), P("data"), P(("data",)))

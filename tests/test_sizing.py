@@ -1,0 +1,86 @@
+"""Architecture-aware sizing engine: exact paper-table reproduction +
+property-based invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig, FAMILY_DECODER
+from repro.configs.paper_models import (DEEPSEEK_V3, LLAMA3_70B,
+                                        MIXTRAL_8X22B, QWEN2_5_72B)
+from repro.core import sizing
+
+
+# --- paper Table I (exact) -------------------------------------------------
+@pytest.mark.parametrize("cfg,mha,actual", [
+    (DEEPSEEK_V3, 65536, 1152),
+    (LLAMA3_70B, 32768, 4096),
+    (MIXTRAL_8X22B, 24576, 4096),
+    (QWEN2_5_72B, 32768, 4096),
+])
+def test_table_i_exact(cfg, mha, actual):
+    assert sizing.mha_equivalent_bytes(cfg) == mha
+    assert sizing.per_token_layer_bytes(cfg) == actual
+
+
+# --- paper Table III (exact) ------------------------------------------------
+@pytest.mark.parametrize("cfg,sq,aa", [
+    (DEEPSEEK_V3, 14, 104),
+    (LLAMA3_70B, 22, 22),
+    (MIXTRAL_8X22B, 42, 31),
+    (QWEN2_5_72B, 22, 22),
+])
+def test_table_iii_exact(cfg, sq, aa):
+    assert sizing.status_quo_max_batch(cfg, 30e9, 4096, tp=8) == sq
+    assert sizing.max_batch(cfg, 30e9, 4096) == aa
+
+
+def test_mla_57x_compression():
+    r = sizing.sizing_report(DEEPSEEK_V3)
+    assert 56.0 < r.compression < 58.0
+    assert r.variant == "mla"
+
+
+# --- properties -------------------------------------------------------------
+@st.composite
+def arch_configs(draw):
+    hd = draw(st.sampled_from([32, 64, 128]))
+    hq = draw(st.integers(1, 64))
+    hkv = draw(st.integers(1, hq).filter(lambda k: hq % k == 0))
+    return ModelConfig(
+        name="t", family=FAMILY_DECODER,
+        n_layers=draw(st.integers(1, 100)), d_model=hq * hd,
+        n_heads=hq, n_kv_heads=hkv, head_dim=hd,
+        d_ff=128, vocab_size=1000)
+
+
+@given(arch_configs(), st.integers(1, 1 << 20))
+@settings(max_examples=100, deadline=None)
+def test_sizing_monotone_and_bounded(cfg, n):
+    b = sizing.per_token_layer_bytes(cfg)
+    assert 0 < b <= sizing.mha_equivalent_bytes(cfg)
+    assert sizing.seq_bytes(cfg, n) == cfg.n_layers * b * n
+    # arch-aware batch >= status-quo for any non-MHA variant at tp=1
+    if cfg.attention_variant != "mha":
+        assert sizing.max_batch(cfg, 1e9, 128) >= \
+            sizing.status_quo_max_batch(cfg, 1e9, 128, tp=1)
+
+
+@given(arch_configs())
+@settings(max_examples=50, deadline=None)
+def test_variant_inference(cfg):
+    v = cfg.attention_variant
+    if cfg.n_kv_heads == cfg.n_heads:
+        assert v == "mha"
+    elif cfg.n_kv_heads == 1:
+        assert v == "mqa"
+    else:
+        assert v == "gqa"
+
+
+@given(st.floats(0.25, 4.0), arch_configs())
+@settings(max_examples=50, deadline=None)
+def test_quantized_precision_scales_linearly(p, cfg):
+    base = sizing.per_token_layer_bytes(cfg, p=2)
+    assert sizing.per_token_layer_bytes(cfg, p=2 * p) == \
+        pytest.approx(base * p)

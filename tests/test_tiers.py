@@ -1,0 +1,89 @@
+"""Tier hierarchy: capacity invariants, moves, failure, hash ring."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError,
+                              ConsistentHashRing, RDMATier, TierHierarchy,
+                              TierManager, TierSpec)
+
+
+def small_specs(cap=10 * 100.0):
+    return tuple(
+        TierSpec(s.tier_id, s.name, s.bandwidth, s.latency,
+                 s.cost_per_gb_hour, cap * (s.tier_id + 1))
+        for s in PAPER_TIER_SPECS)
+
+
+def test_capacity_enforced():
+    t = TierManager(TierSpec(0, "x", 1e9, 1e-6, 0.1, 100.0))
+    t.allocate("a", 60)
+    with pytest.raises(CapacityError):
+        t.allocate("b", 60)
+    t.evict("a")
+    t.allocate("b", 60)
+
+
+def test_paper_capacity_ladder():
+    h = TierHierarchy()
+    # Table IV cumulative capacities: 40 GB -> 200 -> 712 -> ~4.7T -> 38T+
+    gb = 1024 ** 3
+    assert h.capacity_through(0) / gb == pytest.approx(40)
+    assert h.capacity_through(1) / gb == pytest.approx(200)
+    assert h.capacity_through(2) / gb == pytest.approx(712)
+    assert h.capacity_through(3) / (1024 ** 4) == pytest.approx(4.695, rel=.01)
+    assert h.capacity_through(4) / (1024 ** 4) > 38
+
+
+def test_move_and_locate():
+    h = TierHierarchy(small_specs())
+    h[0].write("blk", None, nbytes=50)
+    assert h.locate("blk") == 0
+    h.move("blk", 0, 3)
+    assert h.locate("blk") == 3
+    assert h[0].used == 0 and h[3].used == 50
+
+
+def test_tier_failure_redistributes():
+    h = TierHierarchy(small_specs())
+    for i in range(5):
+        h[2].write(f"b{i}", None, nbytes=50)
+    lost = h.fail_tier(2)
+    assert not h[2].available
+    assert lost == []                       # everything re-homed
+    for i in range(5):
+        assert h.locate(f"b{i}") is not None
+    h.restore_tier(2)
+    assert h[2].available
+
+
+def test_rdma_node_failure_loses_only_its_blocks():
+    spec = TierSpec(4, "rdma", 50e9, 5e-6, .005, 1e9)
+    t = RDMATier(spec, nodes=[f"n{i}" for i in range(4)])
+    for i in range(64):
+        t.allocate(f"b{i}", 100.0)
+    victim = t.placement("b0")
+    lost = t.fail_node(victim)
+    assert "b0" in lost
+    assert all(t.placement(f"b{i}") != victim for i in range(64)
+               if t.contains(f"b{i}"))
+
+
+@given(st.sets(st.text(min_size=1, max_size=8), min_size=2, max_size=12),
+       st.lists(st.text(min_size=1, max_size=16), min_size=1, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_ring_remap_minimal(nodes, keys):
+    """Consistent hashing: removing one node only remaps its own keys."""
+    ring = ConsistentHashRing(sorted(nodes))
+    before = {k: ring.lookup(k) for k in keys}
+    victim = sorted(nodes)[0]
+    ring.remove_node(victim)
+    for k in keys:
+        if before[k] != victim:
+            assert ring.lookup(k) == before[k]
+
+
+def test_ring_balance():
+    ring = ConsistentHashRing([f"n{i}" for i in range(8)], vnodes=128)
+    from collections import Counter
+    c = Counter(ring.lookup(f"key{i}") for i in range(4000))
+    assert max(c.values()) / min(c.values()) < 2.5
