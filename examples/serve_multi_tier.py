@@ -29,9 +29,19 @@ def main():
                                session_id=f"s{i}",
                                block_type="system_prompt"))
     stats = eng.run()
-    print("=== single engine ===")
+    print("=== single engine (paged block-table KV) ===")
     print("done:", stats["scheduler"]["done"],
           " prefix-hit blocks:", stats["scheduler"]["prefix_hit_blocks"])
+    if stats.get("allocator"):
+        al = stats["allocator"]
+        print(f"page pool: {al['n_pages']} pages, peak {al['peak_in_use']} "
+              f"in use, {al['shares']} CoW shares, "
+              f"{al['cow_copies']} CoW copies")
+    if stats.get("async_transfers"):
+        aw = stats["async_transfers"]
+        print(f"async transfers: {aw['completed']} completed off the step "
+              f"loop ({aw['sim_time_total']:.2e}s modelled), "
+              f"{aw['failed']} failed")
     for t in stats["cache"]["tiers"][:3]:
         print(f"  tier {t['tier']:10s} used {t['used'] / 1e6:6.2f} MB  "
               f"reads {t['reads']:4d}  writes {t['writes']:4d}  "
@@ -40,6 +50,7 @@ def main():
     for k, v in stats["cache"]["predictor"].items():
         if v["obs"] > 0:
             print(f"  {k:45s} P={v['mean']:.2f} obs={v['obs']:.0f}")
+    eng.shutdown()
 
     print("\n=== 2-replica cluster with failure drill ===")
     cluster = ReplicaCluster(cfg, ecfg, n_replicas=2)

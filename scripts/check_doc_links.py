@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Docs link check: every repo-relative path referenced from README.md /
+docs/*.md (markdown links and backticked paths) must exist.
+
+    python scripts/check_doc_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#]+)(#[^)]*)?\)")
+CODE_PATH = re.compile(r"`((?:src|docs|tests|examples|benchmarks|scripts)"
+                       r"/[A-Za-z0-9_\-./]+)`")
+
+
+def check(doc: Path) -> list:
+    errors = []
+    text = doc.read_text()
+    refs = set()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1).strip()
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        refs.add(target)
+    for m in CODE_PATH.finditer(text):
+        refs.add(m.group(1))
+    for ref in sorted(refs):
+        path = (doc.parent / ref).resolve()
+        if not path.exists():
+            # also try repo-root-relative (docs/ pages use both)
+            if not (ROOT / ref).resolve().exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link {ref}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for doc in DOCS:
+        if doc.exists():
+            errors.extend(check(doc))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(DOCS)} docs: "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

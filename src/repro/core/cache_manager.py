@@ -331,6 +331,41 @@ class PredictiveCacheManager:
         self.stats.prefetch_issued += len(reqs)
         return len(reqs)
 
+    def plan_prefetch(self, seq_blocks: Sequence[str],
+                      position: int) -> List[Tuple[str, int]]:
+        """RoPE-window prefetch candidates as (block_id, src_tier).
+
+        The async serving path hands these to the tier transfer worker
+        instead of promoting inline; ``prefetch_for_position`` remains
+        the synchronous fallback."""
+        if self.prefetcher is None:
+            return []
+        with self._lock:
+            reqs = self.prefetcher.plan(
+                seq_blocks, position,
+                resident=lambda b: (self.hierarchy.locate(b)
+                                    in self.hot_tiers))
+            out: List[Tuple[str, int]] = []
+            for r in reqs:
+                loc = self.hierarchy.locate(r.block_id)
+                if loc is not None and loc not in self.hot_tiers:
+                    out.append((r.block_id, loc))
+            self.stats.prefetch_issued += len(reqs)
+            return out
+
+    def promote_async(self, block_id: str, src: int) -> float:
+        """Executed on the transfer worker thread: promote into tier 0
+        under the manager lock (metas + hierarchy stay consistent).
+        Returns the modelled fetch time, 0.0 if the block already moved."""
+        with self._lock:
+            loc = self.hierarchy.locate(block_id)
+            meta = self.metas.get(block_id)
+            if loc is None or loc in self.hot_tiers or meta is None:
+                return 0.0
+            t = self.hierarchy[loc].spec.transfer_time(meta.nbytes)
+            self._promote(block_id, loc, 0)
+            return t
+
     def on_tool_switch(self, prev_tool: Optional[str], tool: str,
                        kv_bytes: float = 0.0) -> str:
         """§III-G: record the transition, return its transition type."""

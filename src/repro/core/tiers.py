@@ -24,11 +24,13 @@ from __future__ import annotations
 
 import bisect
 import hashlib
+import itertools
 import os
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -414,3 +416,158 @@ class TierHierarchy:
 
     def stats(self) -> List[dict]:
         return [t.stats_dict() for t in self.tiers]
+
+
+# ---------------------------------------------------------------------------
+# Async tier transfers (paper §IV: "transfers overlap compute")
+# ---------------------------------------------------------------------------
+@dataclass
+class TransferRequest:
+    """One demotion/promotion/fetch to run off the engine step loop."""
+    block_id: str
+    src: int
+    dst: int
+    kind: str = "demote"          # demote | fetch | promote | custom
+    payload: Optional[np.ndarray] = None
+    nbytes: Optional[float] = None
+    tag: str = ""                 # caller correlation key (e.g. request id)
+    evict_src: bool = False       # fetch: drop the source copy after reading
+    # custom: callable(hierarchy) -> (sim_time, payload | None)
+    execute: Optional[Callable] = None
+    ticket: int = 0
+
+
+@dataclass
+class TransferEvent:
+    request: TransferRequest
+    ok: bool
+    sim_time: float = 0.0         # modelled transfer seconds (tier specs)
+    wall_ms: float = 0.0          # host wall time on the worker thread
+    payload: Optional[np.ndarray] = None
+    error: Optional[str] = None
+
+
+class AsyncTierTransferWorker:
+    """Background transfer engine: the scheduler submits demotions /
+    promotions / fetches and polls completion events, so tier traffic
+    never blocks the decode step loop.
+
+    Double-buffered submission: callers append to a staging buffer under
+    a light lock; the worker swaps staging <-> active when it goes to
+    execute, so submitters never contend with an in-progress transfer.
+    A preempted request's payload therefore stays valid in the caller's
+    staging copy until the demotion write completes — restores that
+    arrive before the write finishes are served from the buffer for free.
+    """
+
+    def __init__(self, hierarchy: TierHierarchy, name: str = "kv-transfer"):
+        self.hierarchy = hierarchy
+        self._staging: List[TransferRequest] = []
+        self._completed: Deque[TransferEvent] = deque()
+        self._cv = threading.Condition()
+        self._stop = False
+        self._inflight = 0
+        self._tickets = itertools.count(1)
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.max_inflight = 0
+        self.sim_time_total = 0.0
+        self.wall_ms_total = 0.0
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # -- producer side ------------------------------------------------------
+    def submit(self, req: TransferRequest) -> int:
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("transfer worker closed")
+            req.ticket = next(self._tickets)
+            self._staging.append(req)
+            self.submitted += 1
+            self._inflight += 1
+            self.max_inflight = max(self.max_inflight, self._inflight)
+            self._cv.notify_all()
+        return req.ticket
+
+    def poll(self) -> List[TransferEvent]:
+        """Completion events since the last poll (non-blocking)."""
+        with self._cv:
+            out = list(self._completed)
+            self._completed.clear()
+        return out
+
+    def drain(self, timeout: float = 10.0) -> bool:
+        """Block until every submitted transfer has completed."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._inflight > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cv.wait(remaining):
+                    return self._inflight == 0
+            return True
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+    def stats(self) -> dict:
+        with self._cv:
+            return {"submitted": self.submitted,
+                    "completed": self.completed,
+                    "failed": self.failed,
+                    "in_flight": self._inflight,
+                    "max_inflight": self.max_inflight,
+                    "sim_time_total": self.sim_time_total,
+                    "wall_ms_total": self.wall_ms_total}
+
+    # -- worker side --------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._staging and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._staging:
+                    return
+                active, self._staging = self._staging, []   # buffer swap
+            for req in active:
+                ev = self._execute(req)
+                with self._cv:
+                    self._completed.append(ev)
+                    self._inflight -= 1
+                    self.completed += 1
+                    if not ev.ok:
+                        self.failed += 1
+                    self.sim_time_total += ev.sim_time
+                    self.wall_ms_total += ev.wall_ms
+                    self._cv.notify_all()
+
+    def _execute(self, req: TransferRequest) -> TransferEvent:
+        t0 = time.monotonic()
+        sim, payload = 0.0, None
+        try:
+            if req.execute is not None:
+                sim, payload = req.execute(self.hierarchy)
+            elif req.kind == "demote":
+                if self.hierarchy[req.src].contains(req.block_id):
+                    sim = self.hierarchy.move(req.block_id, req.src, req.dst,
+                                              payload=req.payload)
+                else:
+                    sim = self.hierarchy[req.dst].write(
+                        req.block_id, req.payload, nbytes=req.nbytes)
+            elif req.kind == "fetch":
+                payload, sim = self.hierarchy[req.src].read(req.block_id)
+                if req.evict_src:
+                    self.hierarchy[req.src].evict(req.block_id)
+            elif req.kind == "promote":
+                sim = self.hierarchy.move(req.block_id, req.src, req.dst)
+            else:
+                raise ValueError(f"unknown transfer kind {req.kind!r}")
+            return TransferEvent(req, True, sim,
+                                 (time.monotonic() - t0) * 1e3, payload)
+        except Exception as e:                      # noqa: BLE001
+            return TransferEvent(req, False, sim,
+                                 (time.monotonic() - t0) * 1e3, None, str(e))

@@ -37,12 +37,15 @@ def flash_causal(q, k, v, block_q: int = 128, block_k: int = 128,
                          interpret=it)
 
 
-@functools.partial(jax.jit, static_argnames=("d_latent", "interpret"))
+@functools.partial(jax.jit, static_argnames=("d_latent", "scale",
+                                             "interpret"))
 def mla_decode(q_lat, q_rope, latent_pages, block_tables, lengths,
-               d_latent: int, interpret: bool | None = None):
+               d_latent: int, scale: float | None = None,
+               interpret: bool | None = None):
     it = (not _on_tpu()) if interpret is None else interpret
     return mla_paged_decode(q_lat, q_rope, latent_pages, block_tables,
-                            lengths, d_latent=d_latent, interpret=it)
+                            lengths, d_latent=d_latent, scale=scale,
+                            interpret=it)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -34,14 +34,16 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
 
 
 def mla_paged_decode_ref(q_lat, q_rope, latent_pages, block_tables,
-                         lengths, d_latent: int) -> jax.Array:
+                         lengths, d_latent: int,
+                         scale: float = None) -> jax.Array:
     """q_lat [B,Hq,dl]; q_rope [B,Hq,dr]; latent_pages [N,page,dl+dr];
     -> ctx [B,Hq,dl] (absorbed-form attention output in latent space)."""
     b, hq, dl = q_lat.shape
     dr = q_rope.shape[-1]
     n, page, dtot = latent_pages.shape
     p_max = block_tables.shape[1]
-    scale = 1.0 / math.sqrt(dl // 4 + dr)   # hd ~ dl/4 convention of caller
+    if scale is None:
+        scale = 1.0 / math.sqrt(dl // 4 + dr)  # hd ~ dl/4 convention of caller
 
     def one(ql, qr, bt, ln):
         lat = latent_pages[bt].reshape(p_max * page, dtot)

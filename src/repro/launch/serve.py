@@ -57,6 +57,7 @@ class ReplicaCluster:
             target = self.ring.lookup(req.session_id or str(req.request_id))
             self.engines[target].scheduler.submit(req)
             self.redispatched += 1
+        eng.shutdown()
         return len(lost)
 
     def submit(self, prompt, *, session_id: str, **kw) -> Request:

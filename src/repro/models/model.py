@@ -122,6 +122,15 @@ class Model:
                     tokens: jax.Array) -> Tuple[jax.Array, DecodeState]:
         raise NotImplementedError
 
+    def supports_paged_decode(self) -> bool:
+        """Whether decode_step_paged is available for this config."""
+        return False
+
+    def decode_step_paged(self, params: Params, state: DecodeState,
+                          tokens: jax.Array) -> Tuple[jax.Array, DecodeState]:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no paged decode path")
+
     # -- dry-run inputs -------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every input of the entry point."""
@@ -508,6 +517,93 @@ class DecoderModel(Model):
             x, (ks, vs) = jax.lax.scan(
                 layer_fn, x, (params["layers"], state["k"], state["v"]))
             new_state = {**state, "k": ks, "v": vs, "lengths": lengths + 1}
+
+        x = rms_norm(x[:, 0], params["ln_f"], cfg.norm_eps)
+        return self._logits(params, x), new_state
+
+    # -- paged decode (block-table KV pool; serving fast path) ---------------
+    def supports_paged_decode(self) -> bool:
+        """Paged decode covers dense/MoE decoder-only configs (incl. MLA).
+        VLM (cross-attn state) and int8 caches fall back to the dense
+        slot layout."""
+        cfg = self.cfg
+        return (cfg.family in (FAMILY_DECODER, FAMILY_MOE)
+                and self.kv_dtype != "int8")
+
+    def decode_step_paged(self, params, state, tokens):
+        """One batched decode step over a paged KV pool.
+
+        state: {"k_pages"/"v_pages" [L, N, page, Hkv, hd]} (or MLA
+        {"latent_pages" [L, N, page, dl+dr]}) + "block_tables" [B, P]
+        int32 + "lengths" [B] int32.  The new token's KV is scattered
+        into each request's current page; attention reads through the
+        block table via the Pallas paged kernels (table entry 0 is the
+        caller's scratch page for inactive batch rows).
+        """
+        from repro.kernels import ops
+
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = self.shd.embed_lookup(params["embed"], tokens)[:, None, :]
+        lengths = state["lengths"]
+        bt = state["block_tables"]
+        pool_key = "latent_pages" if cfg.attention_variant == MLA else "k_pages"
+        page = state[pool_key].shape[2]
+        page_ids = bt[jnp.arange(b), lengths // page]
+        offs = lengths % page
+        new_len = lengths + 1
+
+        if cfg.attention_variant == MLA:
+            dl, dr = cfg.d_latent, cfg.d_rope
+            scale = 1.0 / math.sqrt(cfg.hd + dr)
+
+            def layer_fn(x, inp):
+                lp, latp = inp
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                q_nope, q_rope, new_latent = attn.mla_project(
+                    lp["attn"], h, lengths[:, None], cfg)
+                latp = latp.at[page_ids, offs].set(
+                    new_latent[:, 0].astype(latp.dtype))
+                # absorb W_uk into the query; the kernel attends in
+                # latent space and returns ctx [B, Hq, dl]
+                q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
+                                   lp["attn"]["w_uk"])
+                ctx = ops.mla_decode(q_lat[:, 0], q_rope[:, 0], latp, bt,
+                                     new_len, d_latent=dl, scale=scale)
+                out = jnp.einsum("bhl,lhk->bhk", ctx, lp["attn"]["w_uv"])
+                o = jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])[:, None]
+                x = x + o
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                f, _ = self._ffn(lp, h)
+                return x + f, latp
+
+            x, lats = jax.lax.scan(layer_fn, x,
+                                   (params["layers"], state["latent_pages"]))
+            new_state = {**state, "latent_pages": lats, "lengths": new_len}
+        else:
+            def layer_fn(x, inp):
+                lp, kp, vp = inp
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                q, k_new, v_new = attn.project_qkv(lp["attn"], h,
+                                                   lengths[:, None], cfg,
+                                                   shd=NOSHARD)
+                kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
+                vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
+                o = ops.paged_decode(q[:, 0], kp, vp, bt, new_len)
+                mask = attn.head_mask(cfg, o.dtype)
+                if mask is not None:
+                    o = o * mask              # zero padded layout heads
+                o = jnp.einsum("bhk,hkd->bd", o, lp["attn"]["wo"])[:, None]
+                x = x + o
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                f, _ = self._ffn(lp, h)
+                return x + f, (kp, vp)
+
+            x, (kps, vps) = jax.lax.scan(
+                layer_fn, x,
+                (params["layers"], state["k_pages"], state["v_pages"]))
+            new_state = {**state, "k_pages": kps, "v_pages": vps,
+                         "lengths": new_len}
 
         x = rms_norm(x[:, 0], params["ln_f"], cfg.norm_eps)
         return self._logits(params, x), new_state

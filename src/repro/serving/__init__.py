@@ -1,3 +1,5 @@
+from repro.serving.block_allocator import AllocatorStats, BlockAllocator
 from repro.serving.engine import ServingEngine, EngineConfig
+from repro.serving.kvcache import PagedKVCache, SlotKVCache
 from repro.serving.request import Request, SamplingParams, Phase
 from repro.serving.scheduler import Scheduler, SchedulerConfig

@@ -1,23 +1,32 @@
-"""The serving engine: continuous batching over a slot KV cache, with the
-paper's predictive multi-tier cache manager on the prompt-block level.
+"""The serving engine: continuous batching over a paged block-table KV
+cache (dense slots as ``paged=False`` fallback), with the paper's
+predictive multi-tier cache manager on the prompt-block level and an
+async tier-transfer worker off the step loop.
 
 Per step:
-  1. admit waiting requests into free slots — radix-tree prefix match
-     fetches reusable KV blocks from whatever tier holds them (hit
-     accounting per (block-type, transition)), then prefill runs only on
-     the unmatched suffix;
-  2. one batched decode_step over all active slots; sample next tokens;
-  3. finished requests release their blocks (refcounted; reusable blocks
-     linger per predicted reuse probability);
-  4. agentic tool switches update the Markov predictor and trigger
-     §III-G pre-allocation and head-multiplier hooks;
-  5. stragglers are preempted: their slot KV is demoted into the tier
-     hierarchy and restored on resume.
+  1. poll the async transfer worker: completed demotions release their
+     staging buffers, completed fetches un-park restoring requests;
+  2. admit waiting requests into free slots — radix-tree prefix match
+     maps pool-resident prefix pages straight into the new request's
+     block table (copy-on-write sharing; lower-tier blocks are copied
+     from their payloads), then prefill runs only on the unmatched
+     suffix;
+  3. one batched decode over all active slots through the Pallas paged
+     attention kernels (block-table indirection; MLA uses the absorbed
+     latent kernel); sample next tokens;
+  4. finished requests release their slot's page references (refcounted;
+     manager-pinned prefix pages linger for cross-request reuse);
+  5. RoPE prefetch promotions are submitted to the transfer worker
+     instead of running inline;
+  6. stragglers are preempted: their KV payload is handed to the async
+     worker for demotion (double-buffered — an immediate restore is
+     served from the staging buffer; after the write lands, restore is
+     an async fetch the scheduler waits on without blocking decode).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -27,11 +36,12 @@ import numpy as np
 from repro.config import MLA, ModelConfig
 from repro.core import sizing
 from repro.core.cache_manager import PredictiveCacheManager
-from repro.core.tiers import TPU_V5E_TIER_SPECS, TierSpec
+from repro.core.tiers import (TPU_V5E_TIER_SPECS, AsyncTierTransferWorker,
+                              TierSpec, TransferRequest)
 from repro.models.model import build_model
 from repro.serving import sampler as sampler_mod
-from repro.serving.kvcache import SlotKVCache
-from repro.serving.request import Phase, Request, SamplingParams
+from repro.serving.kvcache import PagedKVCache, SlotKVCache
+from repro.serving.request import Request, SamplingParams
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
@@ -48,6 +58,9 @@ class EngineConfig:
     seed: int = 0
     tier_specs: Tuple[TierSpec, ...] = TPU_V5E_TIER_SPECS
     pad_prefill_to: int = 32          # bucket suffix lengths (jit cache)
+    paged: bool = True                # block-table KV pool (False: dense A/B)
+    page_tokens: int = 64             # physical page size (kernel tile)
+    async_transfers: bool = True      # tier moves off the step loop
 
 
 class ServingEngine:
@@ -64,8 +77,23 @@ class ServingEngine:
             max_len=engine_cfg.max_len,
             deadline_s=engine_cfg.deadline_s,
             status_quo_sizing=engine_cfg.status_quo_sizing))
-        self.kv = SlotKVCache(self.model, self.scheduler.n_slots,
-                              engine_cfg.max_len)
+        self.paged = engine_cfg.paged and self.model.supports_paged_decode()
+        if self.paged:
+            bt = sizing.block_tokens(cfg)
+            if bt % engine_cfg.page_tokens != 0:
+                raise ValueError(
+                    f"page_tokens {engine_cfg.page_tokens} must divide the "
+                    f"manager block size {bt}")
+            self.kv = PagedKVCache(self.model, self.scheduler.n_slots,
+                                   engine_cfg.max_len,
+                                   page_tokens=engine_cfg.page_tokens)
+            self._decode = jax.jit(self.model.decode_step_paged,
+                                   donate_argnums=(1,))
+        else:
+            self.kv = SlotKVCache(self.model, self.scheduler.n_slots,
+                                  engine_cfg.max_len)
+            self._decode = jax.jit(self.model.decode_step,
+                                   donate_argnums=(1,))
         # scale tier-0 capacity to the configured budget so eviction and
         # tier demotion actually engage at live-test scale
         specs = list(engine_cfg.tier_specs)
@@ -77,12 +105,21 @@ class ServingEngine:
             enable_dedup=engine_cfg.enable_dedup,
             enable_prefetch=engine_cfg.enable_prefetch,
             enable_multi_tier=engine_cfg.enable_multi_tier)
+        self.worker = (AsyncTierTransferWorker(self.manager.hierarchy)
+                       if engine_cfg.async_transfers else None)
         self._rng = jax.random.PRNGKey(engine_cfg.seed + 1)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(self.model.prefill)
-        self._preempted_payloads: Dict[int, Tuple[np.ndarray, int]] = {}
+        # request_id -> [payload | None, length]; payload is the staging
+        # buffer — dropped once the async demotion write lands
+        self._preempted_payloads: Dict[int, list] = {}
+        # request_id -> ticket of the *latest* demote: stale events from
+        # an earlier preemption epoch of the same request are ignored
+        self._demote_tickets: Dict[int, int] = {}
+        self._inflight_prefetch: set = set()
         self._session_tool: Dict[str, Optional[str]] = {}
         self.steps = 0
+        self.idle_transfer_waits = 0   # run() iterations with only
+        #                                restores in flight (no decode work)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], *, params: SamplingParams = None,
@@ -117,29 +154,40 @@ class ServingEngine:
                                                 self.cfg, req.prompt_len))
             self._session_tool[req.session_id] = req.tool
 
-        # restore a preempted request wholesale
+        # restore a preempted request wholesale (step() guarantees the
+        # payload is present — buffer-less restores go through the async
+        # fetch path before re-admission)
         if req.request_id in self._preempted_payloads:
             payload, length = self._preempted_payloads.pop(req.request_id)
             self.kv.restore_slot(slot, payload, length)
+            self._drop_tier_copy(req.request_id)
             self.scheduler.start(req, slot)
             return
 
-        # prefill covers prompt[:-1]; the first decode step consumes the
-        # final prompt token (so prefill logits are never needed and pad
-        # positions never produce the sampled token)
-        effective = req.prompt[:-1]
+        # prefill covers tokens[:-1]; the first decode step consumes the
+        # final token (so prefill logits are never needed and pad
+        # positions never produce the sampled token).  ``generated`` is
+        # non-empty only on lost-payload recovery, where the whole
+        # context is re-prefilled.
+        tokens_all = list(req.prompt) + list(req.generated)
+        effective = tokens_all[:-1]
         matched = mgr.match_prefix(effective)
-        payloads: List[np.ndarray] = []
+        prefix_len, n_hit = 0, 0
         for bid in matched:
             res = mgr.access(bid, transition=transition)
-            pl = mgr._payloads.get(bid)
-            if pl is None or res.recomputed:
+            if res.recomputed:
                 break                      # payload lost -> recompute rest
-            payloads.append(pl)
-        prefix_len = len(payloads) * bt
-        req.prefix_hit_blocks = len(payloads)
-        if payloads:
-            self.kv.inject_blocks(slot, payloads, bt)
+            if self.paged and self.kv.can_share(bid):
+                # pool-resident block: CoW-map its physical pages
+                self.kv.share_block(slot, bid, prefix_len)
+            else:
+                pl = mgr._payloads.get(bid)
+                if pl is None:
+                    break
+                self.kv.inject_block(slot, pl, prefix_len)
+            prefix_len += bt
+            n_hit += 1
+        req.prefix_hit_blocks = n_hit
 
         # prefill the unmatched suffix
         suffix = list(effective[prefix_len:])
@@ -157,18 +205,7 @@ class ServingEngine:
             state1 = (dict(latent=suffix_kv[0])
                       if self.cfg.attention_variant == MLA
                       else dict(k=suffix_kv[0], v=suffix_kv[1]))
-            # place suffix KV after the prefix
-            if self.cfg.attention_variant == MLA:
-                self.kv.state["latent"] = self.kv.state["latent"].at[
-                    :, slot, prefix_len:prefix_len + padded_len].set(
-                    state1["latent"][:, 0])
-            else:
-                self.kv.state["k"] = self.kv.state["k"].at[
-                    :, slot, prefix_len:prefix_len + padded_len].set(
-                    state1["k"][:, 0])
-                self.kv.state["v"] = self.kv.state["v"].at[
-                    :, slot, prefix_len:prefix_len + padded_len].set(
-                    state1["v"][:, 0])
+            self.kv.write_range(slot, state1, prefix_len, padded_len)
         # true sequence length (padding tokens are masked by length)
         self.kv.set_length(slot, len(effective))
 
@@ -177,8 +214,11 @@ class ServingEngine:
         new_ids = mgr.register_sequence(
             list(effective[:n_full]), block_type=req.block_type,
             recompute_cost_per_block=self._block_recompute_cost())
-        for i, bid in enumerate(new_ids[len(payloads):], start=len(payloads)):
-            mgr._payloads[bid] = self.kv.extract_block(slot, i * bt, bt)
+        for i, bid in enumerate(new_ids):
+            if bid not in mgr._payloads:
+                mgr._payloads[bid] = self.kv.extract_block(slot, i * bt, bt)
+            if self.paged:
+                self.kv.register_block_pages(bid, slot, i * bt, bt)
         req.block_ids = new_ids
         self.scheduler.start(req, slot)
 
@@ -188,14 +228,85 @@ class ServingEngine:
         return flops / 197e12
 
     # ------------------------------------------------------------------
+    # async transfer bookkeeping
+    # ------------------------------------------------------------------
+    def _drop_tier_copy(self, request_id: int) -> None:
+        bid = f"preempt-{request_id}"
+        loc = self.manager.hierarchy.locate(bid)
+        if loc is not None:
+            self.manager.hierarchy[loc].evict(bid)
+
+    def _poll_transfers(self) -> None:
+        for ev in self.scheduler.poll_transfers(self.worker):
+            req = ev.request
+            if req.kind == "demote" and req.tag:
+                rid = int(req.tag)
+                if self._demote_tickets.get(rid) != req.ticket:
+                    continue           # stale epoch: a newer demote (FIFO
+                    #                    after this one) owns the tier copy
+                self._demote_tickets.pop(rid, None)
+                ent = self._preempted_payloads.get(rid)
+                if ent is not None and ev.ok:
+                    ent[0] = None          # staging buffer released
+                elif ent is None:
+                    # restored from the buffer before the write landed:
+                    # the tier copy is stale
+                    self._drop_tier_copy(rid)
+            elif req.kind == "fetch" and req.tag:
+                rid = int(req.tag)
+                ent = self._preempted_payloads.get(rid)
+                if ev.ok and ev.payload is not None and ent is not None:
+                    ent[0] = ev.payload
+                else:
+                    # payload lost: recovery re-prefills the full context
+                    self._preempted_payloads.pop(rid, None)
+                self.scheduler.on_transfer_complete(rid)
+            elif req.tag == "prefetch":
+                self._inflight_prefetch.discard(req.block_id)
+
+    def _begin_async_restore(self, req: Request) -> None:
+        bid = f"preempt-{req.request_id}"
+        loc = self.manager.hierarchy.locate(bid)
+        if loc is None:
+            # demoted copy lost entirely: recompute path
+            self._preempted_payloads.pop(req.request_id, None)
+            slot = self.kv.acquire(req.request_id, req.prompt_len)
+            self._admit(req, slot)
+            return
+        self.scheduler.block_on_transfer(req)
+        self.worker.submit(TransferRequest(
+            bid, loc, 0, kind="fetch", evict_src=True,
+            tag=str(req.request_id)))
+
+    def _submit_prefetch(self, block_ids: Sequence[str],
+                         position: int) -> None:
+        if self.worker is None:
+            self.manager.prefetch_for_position(block_ids, position)
+            return
+        for bid, loc in self.manager.plan_prefetch(block_ids, position):
+            if bid in self._inflight_prefetch:
+                continue
+            self._inflight_prefetch.add(bid)
+            self.worker.submit(TransferRequest(
+                bid, loc, 0, kind="custom", tag="prefetch",
+                execute=(lambda h, b=bid, l=loc:
+                         (self.manager.promote_async(b, l), None))))
+
+    # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration; returns #tokens generated."""
         sch = self.scheduler
+        # completion events (scheduler polls; engine interprets)
+        self._poll_transfers()
         # straggler handling
         for req in sch.check_stragglers():
             self.preempt(req)
         # admission
         for req in sch.admissible(len(self.kv.free_slots())):
+            ent = self._preempted_payloads.get(req.request_id)
+            if ent is not None and ent[0] is None:
+                self._begin_async_restore(req)
+                continue
             slot = self.kv.acquire(req.request_id, req.prompt_len)
             self._admit(req, slot)
         if not sch.running:
@@ -207,13 +318,18 @@ class ServingEngine:
                     else req.prompt[-1])
             tokens[req.slot] = last
         self._rng, step_rng = jax.random.split(self._rng)
-        logits, self.kv.state = self._decode(
-            self.params, self.kv.state, jnp.asarray(tokens))
+        if self.paged:
+            state = self.kv.decode_state()
+            logits, new_state = self._decode(self.params, state,
+                                             jnp.asarray(tokens))
+            self.kv.absorb(new_state)
+        else:
+            logits, self.kv.state = self._decode(
+                self.params, self.kv.state, jnp.asarray(tokens))
         produced = 0
         now = time.monotonic()
         by_slot = {r.slot: r for r in sch.running.values()}
         # per-request sampling (params differ per request)
-        logits_np = None
         for slot, req in sorted(by_slot.items()):
             self._rng, r = jax.random.split(self._rng)
             tok = sampler_mod.sample(
@@ -225,39 +341,71 @@ class ServingEngine:
                 req.t_first_token = now
             produced += 1
             self.kv.slots[slot].length += 1
-            # RoPE prefetch hook: promote blocks around the decode position
+            # RoPE prefetch hook: promote blocks around the decode
+            # position (async when the transfer worker is on)
             if req.block_ids:
-                self.manager.prefetch_for_position(
-                    req.block_ids, self.kv.slots[slot].length)
-        # lengths already advanced inside decode_step state; sync infos
+                self._submit_prefetch(req.block_ids,
+                                      self.kv.slots[slot].length)
+        # lengths already advanced; sync infos + finish bookkeeping
         for slot, req in by_slot.items():
             if req.finished() or req.total_len >= self.ecfg.max_len - 1:
                 self.manager.release_sequence(req.block_ids)
                 sch.finish(req)
                 self.kv.release(req.slot)
+        if self.paged:
+            # unpin pages of blocks the manager demoted or dropped
+            self.kv.gc_blocks(self.manager)
         self.manager.tick()
         self.manager.age_all()
         self.steps += 1
         return produced
 
     def preempt(self, req: Request) -> None:
-        """Demote a running request's KV into the tier hierarchy."""
+        """Demote a running request's KV into the tier hierarchy —
+        asynchronously when the transfer worker is on (the step loop
+        never waits on the write)."""
         payload, length = self.kv.evict_slot_to_payload(req.slot)
-        self._preempted_payloads[req.request_id] = (payload, length)
-        # account the demotion as tier-1 writes
-        self.manager.hierarchy[1].write(
-            f"preempt-{req.request_id}", payload,
-            nbytes=float(payload.nbytes))
+        self._preempted_payloads[req.request_id] = [payload, length]
+        bid = f"preempt-{req.request_id}"
+        # drop any previous-epoch tier copy so size accounting matches
+        # the new payload (the in-flight old write, if any, is superseded
+        # FIFO by the one submitted below)
+        self._drop_tier_copy(req.request_id)
+        if self.worker is not None:
+            ticket = self.worker.submit(TransferRequest(
+                bid, 0, 1, kind="demote", payload=payload,
+                nbytes=float(payload.nbytes), tag=str(req.request_id)))
+            self._demote_tickets[req.request_id] = ticket
+        else:
+            self.manager.hierarchy[1].write(bid, payload,
+                                            nbytes=float(payload.nbytes))
         self.kv.release(req.slot)
         self.scheduler.preempt(req)
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 10_000) -> dict:
         while self.scheduler.has_work() and self.steps < max_steps:
-            self.step()
+            produced = self.step()
+            if (produced == 0 and not self.scheduler.running
+                    and self.scheduler.blocked):
+                self.idle_transfer_waits += 1
+                time.sleep(1e-3)       # idle: only fetches in flight
         return self.stats()
 
     def stats(self) -> dict:
-        return {"scheduler": self.scheduler.stats(),
-                "cache": self.manager.metrics(),
-                "steps": self.steps}
+        out = {"scheduler": self.scheduler.stats(),
+               "cache": self.manager.metrics(),
+               "steps": self.steps,
+               "idle_transfer_waits": self.idle_transfer_waits,
+               "paged": self.paged}
+        if self.paged:
+            out["allocator"] = self.kv.allocator.stats_dict()
+        if self.worker is not None:
+            out["async_transfers"] = self.worker.stats()
+        return out
+
+    def shutdown(self) -> None:
+        if self.worker is not None:
+            self.worker.drain(timeout=5.0)
+            self.worker.close()
+            self.worker = None

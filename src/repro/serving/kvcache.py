@@ -1,13 +1,28 @@
-"""Slot-based KV cache for the live engine + block payload conversion.
+"""KV caches for the live engine: paged block-table pool (default) and
+the dense per-slot layout (``paged=False`` fallback).
 
-The live (CPU/TPU-host) engine decodes from a contiguous per-slot cache
-(the Model decode API); the paper's multi-tier block machinery operates on
-*prompt-prefix blocks*: after prefill, each 128-token block of a prompt's
-KV state is registered with the PredictiveCacheManager (payload = host
-numpy), enabling cross-request prefix reuse, preemption/restore and tier
-demotion.  On TPU the ragged decode fast path is the paged-attention
-Pallas kernel (kernels/paged_attention.py); block tables map 1:1 onto
-this block layout.
+``PagedKVCache`` is the paper's Tier-0 block layout made live: KV state
+lives in a global pool of fixed-size pages ([L, n_pages, page, ...]),
+each decode slot owns a block table of page indices, and the Pallas
+paged-attention kernels (kernels/paged_attention.py,
+kernels/mla_paged_decode.py) read through that indirection during
+batched decode.  Pages are refcounted (serving/block_allocator.py):
+radix-prefix hits map the prefix's physical pages straight into the new
+request's block table (copy-on-write sharing — zero bytes moved), and
+the PredictiveCacheManager pins the pages of every tier-0-resident
+prompt block so they survive request completion for cross-request reuse.
+
+``SlotKVCache`` keeps the original contiguous per-slot DecodeState for
+A/B comparison and for families without a paged decode path (hybrid,
+RWKV, enc-dec, VLM).
+
+Both caches speak the same engine-facing API (see ``_KVCacheBase``):
+    acquire / release / free_slots / set_length
+    write_prefill / write_range / inject_block / prefix_kv
+    extract_block / evict_slot_to_payload / restore_slot
+Block payloads (numpy, [2, L, n, Hkv, hd] or MLA [1, L, n, dl+dr]) are
+the currency of the multi-tier hierarchy — identical in both layouts,
+so tier demotion/promotion is layout-agnostic.
 """
 from __future__ import annotations
 
@@ -19,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import MLA, ModelConfig
+from repro.core.tiers import CapacityError
 from repro.models.model import Model
+from repro.serving.block_allocator import BlockAllocator
 
 
 @dataclass
@@ -29,7 +46,59 @@ class SlotInfo:
     active: bool = False
 
 
-class SlotKVCache:
+class _KVCacheBase:
+    """Slot bookkeeping + payload conversion shared by both layouts.
+
+    Subclasses provide ``write_range`` / ``extract_block`` /
+    ``set_length``; everything here is layout-agnostic."""
+
+    cfg: ModelConfig
+    slots: List[SlotInfo]
+
+    # -- slots --------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def acquire(self, request_id: int, length: int) -> int:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                self.slots[i] = SlotInfo(request_id, length, True)
+                return i
+        raise RuntimeError("no free slot")
+
+    # -- payloads -----------------------------------------------------------
+    def _payload_state(self, payload: np.ndarray) -> Dict:
+        if self.cfg.attention_variant == MLA:
+            return {"latent": jnp.asarray(payload[0])[:, None]}
+        return {"k": jnp.asarray(payload[0])[:, None],
+                "v": jnp.asarray(payload[1])[:, None]}
+
+    def write_prefill(self, slot: int, state1: Dict, length: int) -> None:
+        """Copy a batch-1 prefill state into slot `slot`."""
+        self.write_range(slot, state1, 0, length)
+        self.set_length(slot, length)
+
+    def inject_block(self, slot: int, payload: np.ndarray,
+                     start: int) -> int:
+        """Write one reused block payload at token offset `start`."""
+        n = payload.shape[2]
+        self.write_range(slot, self._payload_state(payload), start, n)
+        return n
+
+    # -- preemption ---------------------------------------------------------
+    def evict_slot_to_payload(self, slot: int) -> Tuple[np.ndarray, int]:
+        """Preemption: extract the whole slot state for tier demotion."""
+        length = self.slots[slot].length
+        payload = self.extract_block(slot, 0, length)
+        return payload, length
+
+    def restore_slot(self, slot: int, payload: np.ndarray,
+                     length: int) -> None:
+        self.inject_block(slot, payload, 0)
+        self.set_length(slot, length)
+
+
+class SlotKVCache(_KVCacheBase):
     """Fixed decode slots over the model's contiguous DecodeState."""
 
     def __init__(self, model: Model, n_slots: int, max_len: int):
@@ -41,16 +110,6 @@ class SlotKVCache:
         self.slots = [SlotInfo() for _ in range(n_slots)]
 
     # ------------------------------------------------------------------
-    def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if not s.active]
-
-    def acquire(self, request_id: int, length: int) -> int:
-        for i, s in enumerate(self.slots):
-            if not s.active:
-                self.slots[i] = SlotInfo(request_id, length, True)
-                return i
-        raise RuntimeError("no free slot")
-
     def release(self, slot: int) -> None:
         self.slots[slot] = SlotInfo()
         self.state["lengths"] = self.state["lengths"].at[slot].set(0)
@@ -62,17 +121,20 @@ class SlotKVCache:
     # ------------------------------------------------------------------
     # moving KV between the slot cache and block payloads (numpy)
     # ------------------------------------------------------------------
-    def write_prefill(self, slot: int, state1: Dict, length: int) -> None:
-        """Copy a batch-1 prefill state into slot `slot`."""
+    def write_range(self, slot: int, state1: Dict, start: int,
+                    n_tokens: int) -> None:
+        """Copy a batch-1 KV state into positions [start, start+n)."""
         if self.cfg.attention_variant == MLA:
             self.state["latent"] = self.state["latent"].at[
-                :, slot, :length].set(state1["latent"][:, 0, :length])
+                :, slot, start:start + n_tokens].set(
+                state1["latent"][:, 0, :n_tokens])
         else:
-            self.state["k"] = self.state["k"].at[:, slot, :length].set(
-                state1["k"][:, 0, :length])
-            self.state["v"] = self.state["v"].at[:, slot, :length].set(
-                state1["v"][:, 0, :length])
-        self.set_length(slot, length)
+            self.state["k"] = self.state["k"].at[
+                :, slot, start:start + n_tokens].set(
+                state1["k"][:, 0, :n_tokens])
+            self.state["v"] = self.state["v"].at[
+                :, slot, start:start + n_tokens].set(
+                state1["v"][:, 0, :n_tokens])
 
     def extract_block(self, slot: int, start: int, n_tokens: int) -> np.ndarray:
         """Slot KV -> block payload [2, L, n_tokens, H, hd] (or MLA
@@ -84,23 +146,6 @@ class SlotKVCache:
         v = np.asarray(self.state["v"][:, slot, start:start + n_tokens])
         return np.stack([k, v])
 
-    def inject_blocks(self, slot: int, payloads: Sequence[np.ndarray],
-                      block_tokens: int) -> int:
-        """Write reused prefix blocks into a slot; returns prefix length."""
-        pos = 0
-        for pl in payloads:
-            n = pl.shape[2]
-            if self.cfg.attention_variant == MLA:
-                self.state["latent"] = self.state["latent"].at[
-                    :, slot, pos:pos + n].set(jnp.asarray(pl[0]))
-            else:
-                self.state["k"] = self.state["k"].at[
-                    :, slot, pos:pos + n].set(jnp.asarray(pl[0]))
-                self.state["v"] = self.state["v"].at[
-                    :, slot, pos:pos + n].set(jnp.asarray(pl[1]))
-            pos += n
-        return pos
-
     def prefix_kv(self, slot: int, length: int):
         """Cached prefix (k, v) for suffix-prefill, batch dim restored."""
         if self.cfg.attention_variant == MLA:
@@ -108,14 +153,231 @@ class SlotKVCache:
         return (self.state["k"][:, slot:slot + 1, :length],
                 self.state["v"][:, slot:slot + 1, :length])
 
-    # ------------------------------------------------------------------
-    def evict_slot_to_payload(self, slot: int) -> Tuple[np.ndarray, int]:
-        """Preemption: extract the whole slot state for tier demotion."""
-        length = self.slots[slot].length
-        payload = self.extract_block(slot, 0, length)
-        return payload, length
 
-    def restore_slot(self, slot: int, payload: np.ndarray,
-                     length: int) -> None:
-        self.inject_blocks(slot, [payload], length)
-        self.set_length(slot, length)
+# ===========================================================================
+# Paged block-table cache (the default serving path)
+# ===========================================================================
+class PagedKVCache(_KVCacheBase):
+    """Global page pool + per-slot block tables + CoW prefix sharing.
+
+    Pool layout (page 0 is a reserved scratch page that absorbs the
+    decode-step writes of inactive slots):
+
+        GQA/MHA/MQA:  k_pages, v_pages  [L, n_pages, page, Hkv, hd]
+        MLA:          latent_pages      [L, n_pages, page, dl+dr]
+
+    Block tables are host numpy ([n_slots, pages_per_slot] int32, 0 =
+    unmapped); `decode_state()` snapshots them (plus per-slot lengths)
+    into device arrays for `Model.decode_step_paged`, which scatters the
+    new token's KV into the pool and attends through the Pallas paged
+    kernels.
+    """
+
+    def __init__(self, model: Model, n_slots: int, max_len: int, *,
+                 page_tokens: int = 64, reserve_pages: Optional[int] = None,
+                 dtype=jnp.bfloat16):
+        cfg = model.cfg
+        self.model = model
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page = page_tokens
+        self.pages_per_slot = -(-max_len // page_tokens)
+        if reserve_pages is None:
+            # headroom for manager-pinned prefix blocks that outlive slots
+            reserve_pages = max(8, 2 * self.pages_per_slot)
+        self.n_pages = 1 + n_slots * self.pages_per_slot + reserve_pages
+        self.allocator = BlockAllocator(self.n_pages, reserved=(0,))
+        self.mla = cfg.attention_variant == MLA
+        L = cfg.n_layers
+        if self.mla:
+            d = cfg.d_latent + cfg.d_rope
+            self.pools = {"latent_pages": jnp.zeros(
+                (L, self.n_pages, self.page, d), dtype)}
+        else:
+            hkv = max(cfg.n_kv_heads, 1)
+            shape = (L, self.n_pages, self.page, hkv, cfg.hd)
+            self.pools = {"k_pages": jnp.zeros(shape, dtype),
+                          "v_pages": jnp.zeros(shape, dtype)}
+        self.tables = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self._mapped = [0] * n_slots           # contiguous mapped page count
+        self.slots = [SlotInfo() for _ in range(n_slots)]
+        self.block_pages: Dict[str, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    # ------------------------------------------------------------------
+    def release(self, slot: int) -> None:
+        for pi in range(self._mapped[slot]):
+            self.allocator.deref(int(self.tables[slot, pi]))
+        self.tables[slot, :] = 0
+        self._mapped[slot] = 0
+        self.slots[slot] = SlotInfo()
+
+    def set_length(self, slot: int, length: int) -> None:
+        self.slots[slot].length = length
+
+    # ------------------------------------------------------------------
+    # page mapping
+    # ------------------------------------------------------------------
+    def _alloc(self, n: int) -> List[int]:
+        """Allocate with backpressure: a full pool first reclaims pages
+        pinned for manager blocks (oldest registrations first) — the
+        blocks' host payloads survive in the manager, so prefix hits
+        degrade from CoW page-sharing to payload injection instead of
+        the engine crashing."""
+        try:
+            return self.allocator.alloc(n)
+        except CapacityError:
+            for bid in list(self.block_pages):
+                self.drop_block_pages(bid)
+                if self.allocator.n_free >= n:
+                    break
+            return self.allocator.alloc(n)
+
+    def _ensure_pages(self, slot: int, n_tokens: int) -> None:
+        need = -(-n_tokens // self.page)
+        cur = self._mapped[slot]
+        if need <= cur:
+            return
+        for i, pid in enumerate(self._alloc(need - cur)):
+            self.tables[slot, cur + i] = pid
+        self._mapped[slot] = need
+
+    def ensure_private(self, slot: int, page_index: int) -> None:
+        """Copy-on-write: give the slot a private copy of a shared page
+        before any write lands on it."""
+        pid = int(self.tables[slot, page_index])
+        if pid == 0 or self.allocator.refcount(pid) <= 1:
+            return
+        new = self._alloc(1)[0]
+        for key, arr in self.pools.items():
+            self.pools[key] = arr.at[:, new].set(arr[:, pid])
+        self.tables[slot, page_index] = new
+        self.allocator.deref(pid)
+        self.allocator.note_cow_copy()
+
+    # ------------------------------------------------------------------
+    # CoW prefix sharing with the cache manager
+    # ------------------------------------------------------------------
+    def can_share(self, block_id: str) -> bool:
+        return block_id in self.block_pages
+
+    def share_block(self, slot: int, block_id: str, start: int) -> int:
+        """Map a pool-resident block's pages into the slot's table
+        (refcount bump — no bytes move).  Returns tokens mapped."""
+        pids = self.block_pages[block_id]
+        assert start % self.page == 0, "shared blocks must be page-aligned"
+        pi0 = start // self.page
+        for j, pid in enumerate(pids):
+            self.allocator.ref(pid, share=True)
+            self.tables[slot, pi0 + j] = pid
+        self._mapped[slot] = max(self._mapped[slot], pi0 + len(pids))
+        return len(pids) * self.page
+
+    def register_block_pages(self, block_id: str, slot: int, start: int,
+                             n_tokens: int) -> None:
+        """Pin the pages backing a newly-registered prompt block so they
+        survive the slot for cross-request reuse."""
+        if block_id in self.block_pages:
+            return
+        assert start % self.page == 0 and n_tokens % self.page == 0
+        pids = [int(self.tables[slot, pi])
+                for pi in range(start // self.page,
+                                (start + n_tokens) // self.page)]
+        for pid in pids:
+            self.allocator.ref(pid)
+        self.block_pages[block_id] = pids
+
+    def drop_block_pages(self, block_id: str) -> None:
+        for pid in self.block_pages.pop(block_id, ()):
+            self.allocator.deref(pid)
+
+    def gc_blocks(self, manager) -> int:
+        """Unpin pages of blocks that left tier 0 (demoted / evicted /
+        released by the PredictiveCacheManager)."""
+        dropped = 0
+        for bid in list(self.block_pages):
+            if bid not in manager.metas or manager.hierarchy.locate(bid) != 0:
+                self.drop_block_pages(bid)
+                dropped += 1
+        return dropped
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+    def write_range(self, slot: int, state1: Dict, start: int,
+                    n_tokens: int) -> None:
+        """Scatter a batch-1 KV state into positions [start, start+n),
+        allocating (and CoW-privatizing) pages as needed.  One scatter
+        per pool tensor — the functional update copies the whole pool in
+        eager mode, so per-page updates would cost pages-touched full
+        copies instead of one."""
+        self._ensure_pages(slot, start + n_tokens)
+        for pi in range(start // self.page,
+                        (start + n_tokens - 1) // self.page + 1):
+            self.ensure_private(slot, pi)
+        if self.mla:
+            items = [("latent_pages", state1["latent"][:, 0])]
+        else:
+            items = [("k_pages", state1["k"][:, 0]),
+                     ("v_pages", state1["v"][:, 0])]
+        pos = np.arange(start, start + n_tokens)
+        pid_arr = jnp.asarray(self.tables[slot, pos // self.page])
+        off_arr = jnp.asarray(pos % self.page)
+        for key, data in items:
+            arr = self.pools[key]
+            self.pools[key] = arr.at[:, pid_arr, off_arr].set(
+                jnp.asarray(data[:, :n_tokens], arr.dtype))
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def _gather(self, key: str, slot: int, start: int, n_tokens: int):
+        """Pool pages -> contiguous [L, n_tokens, ...] (device array)."""
+        p0 = start // self.page
+        p1 = (start + n_tokens - 1) // self.page
+        pids = np.asarray(self.tables[slot, p0:p1 + 1])
+        arr = self.pools[key][:, pids]              # [L, np, page, ...]
+        L = arr.shape[0]
+        flat = arr.reshape((L, -1) + arr.shape[3:])
+        rel = start - p0 * self.page
+        return flat[:, rel:rel + n_tokens]
+
+    def extract_block(self, slot: int, start: int,
+                      n_tokens: int) -> np.ndarray:
+        if self.mla:
+            lat = self._gather("latent_pages", slot, start, n_tokens)
+            return np.asarray(lat)[None]
+        k = np.asarray(self._gather("k_pages", slot, start, n_tokens))
+        v = np.asarray(self._gather("v_pages", slot, start, n_tokens))
+        return np.stack([k, v])
+
+    def prefix_kv(self, slot: int, length: int):
+        if self.mla:
+            return (self._gather("latent_pages", slot, 0, length)[:, None],)
+        return (self._gather("k_pages", slot, 0, length)[:, None],
+                self._gather("v_pages", slot, 0, length)[:, None])
+
+    # ------------------------------------------------------------------
+    # decode-step interface
+    # ------------------------------------------------------------------
+    def decode_state(self) -> Dict:
+        """Snapshot for Model.decode_step_paged.  Guarantees every active
+        slot has a private page mapped for the incoming token."""
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            self._ensure_pages(i, s.length + 1)
+            self.ensure_private(i, s.length // self.page)
+        lengths = np.asarray([s.length if s.active else 0
+                              for s in self.slots], np.int32)
+        state = dict(self.pools)
+        state["block_tables"] = jnp.asarray(self.tables)
+        state["lengths"] = jnp.asarray(lengths)
+        return state
+
+    def absorb(self, new_state: Dict) -> None:
+        """Take back the (donated) pool arrays after a decode step."""
+        for key in self.pools:
+            self.pools[key] = new_state[key]

@@ -15,6 +15,7 @@ class Phase(Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     PREEMPTED = "preempted"
+    RESTORING = "restoring"        # KV fetch from a lower tier in flight
     DONE = "done"
 
 

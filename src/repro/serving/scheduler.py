@@ -45,8 +45,11 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}
         self.preempted: Deque[Request] = deque()
+        self.blocked: Dict[int, Request] = {}   # awaiting an async KV fetch
         self.done: List[Request] = []
         self.stragglers = 0
+        self.transfer_events = 0
+        self.async_restores = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -78,6 +81,33 @@ class Scheduler:
         self.running.pop(req.request_id, None)
         self.preempted.appendleft(req)
 
+    # ------------------------------------------------------------------
+    # async tier transfers (core/tiers.AsyncTierTransferWorker)
+    # ------------------------------------------------------------------
+    def poll_transfers(self, worker) -> list:
+        """Drain the transfer worker's completion events (the engine
+        interprets them; the scheduler only accounts and unblocks)."""
+        if worker is None:
+            return []
+        events = worker.poll()
+        self.transfer_events += len(events)
+        return events
+
+    def block_on_transfer(self, req: Request) -> None:
+        """Park a request until its KV fetch from a lower tier lands."""
+        req.phase = Phase.RESTORING
+        self.blocked[req.request_id] = req
+        self.async_restores += 1
+
+    def on_transfer_complete(self, request_id: int) -> Optional[Request]:
+        """Un-park a request whose restore fetch completed; it re-enters
+        the admission queue at the head."""
+        req = self.blocked.pop(request_id, None)
+        if req is not None:
+            req.phase = Phase.PREEMPTED
+            self.preempted.appendleft(req)
+        return req
+
     def check_stragglers(self, now: Optional[float] = None) -> List[Request]:
         """Requests over their deadline -> candidates for preempt +
         re-dispatch."""
@@ -88,7 +118,8 @@ class Scheduler:
         return out
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.preempted)
+        return bool(self.waiting or self.running or self.preempted
+                    or self.blocked)
 
     def stats(self) -> dict:
         ttfts = sorted(r.ttft for r in self.done if r.ttft is not None)
@@ -103,5 +134,7 @@ class Scheduler:
                 "ttft_p50": pct(0.50), "ttft_p99": pct(0.99),
                 "generated_tokens": total_tokens,
                 "stragglers": self.stragglers,
+                "transfer_events": self.transfer_events,
+                "async_restores": self.async_restores,
                 "prefix_hit_blocks": sum(r.prefix_hit_blocks
                                          for r in self.done)}

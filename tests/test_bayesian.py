@@ -1,5 +1,6 @@
 """Beta-posterior predictor: math, convergence, blending, properties."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bayesian import (BLOCK_TYPES, TRANSITION_TYPES,

@@ -1,0 +1,156 @@
+"""Block allocator + paged KV cache invariants: alloc/free roundtrip,
+refcounted sharing, copy-on-write isolation, manager-pinned pages."""
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, FAMILY_DECODER
+from repro.core.tiers import CapacityError
+from repro.models.model import build_model
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.kvcache import PagedKVCache
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(8, reserved=(0,))
+    pages = a.alloc(7)
+    assert sorted(pages) == list(range(1, 8))
+    assert a.n_free == 0
+    for p in pages:
+        assert a.deref(p)
+    assert a.n_free == 7
+    assert a.stats.allocated == 7 and a.stats.freed == 7
+
+
+def test_exhaustion_raises():
+    a = BlockAllocator(4, reserved=(0,))
+    a.alloc(3)
+    with pytest.raises(CapacityError):
+        a.alloc(1)
+
+
+def test_reserved_page_never_allocated():
+    a = BlockAllocator(4, reserved=(0,))
+    assert 0 not in a.alloc(3)
+    assert not a.deref(0)          # deref of reserved page is a no-op
+
+
+def test_refcount_share_frees_only_at_zero():
+    a = BlockAllocator(4)
+    (p,) = a.alloc(1)
+    a.ref(p, share=True)
+    a.ref(p, share=True)
+    assert a.refcount(p) == 3
+    assert not a.deref(p)
+    assert not a.deref(p)
+    assert a.deref(p)              # last reference frees
+    assert a.stats.shares == 2
+    with pytest.raises(ValueError):
+        a.deref(p)                 # double-free detected
+
+
+def test_ref_of_free_page_rejected():
+    a = BlockAllocator(4)
+    with pytest.raises(ValueError):
+        a.ref(2)
+
+
+# ---------------------------------------------------------------------------
+# paged cache CoW
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def paged_kv():
+    cfg = ModelConfig(name="tiny", family=FAMILY_DECODER, n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=256)
+    model = build_model(cfg)
+    return PagedKVCache(model, n_slots=4, max_len=256, page_tokens=64)
+
+
+def _fake_state(cfg, n_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (cfg.n_layers, 1, n_tokens, cfg.n_kv_heads, cfg.hd)
+    return {"k": rng.normal(size=shape).astype(np.float32),
+            "v": rng.normal(size=shape).astype(np.float32)}
+
+
+def test_share_then_write_triggers_cow(paged_kv):
+    kv = paged_kv
+    cfg = kv.cfg
+    bt = 128                                       # manager block size
+    s0 = kv.acquire(1, bt)
+    kv.write_prefill(s0, _fake_state(cfg, bt, seed=1), bt)
+    kv.register_block_pages("blkA", s0, 0, bt)
+    before = kv.extract_block(s0, 0, bt)
+
+    # CoW-share the block into a second slot, then overwrite the shared
+    # region there: the writer must get private copies
+    s1 = kv.acquire(2, bt)
+    assert kv.can_share("blkA")
+    assert kv.share_block(s1, "blkA", 0) == bt
+    assert kv.allocator.stats.shares >= 2
+    kv.write_range(s1, _fake_state(cfg, bt, seed=2), 0, bt)
+    assert kv.allocator.stats.cow_copies >= 2      # both shared pages copied
+
+    after = kv.extract_block(s0, 0, bt)            # original untouched
+    np.testing.assert_array_equal(before, after)
+    changed = kv.extract_block(s1, 0, bt)
+    assert np.abs(changed - before).max() > 0
+    kv.release(s0)
+    kv.release(s1)
+    kv.drop_block_pages("blkA")
+
+
+def test_release_keeps_pinned_block_pages(paged_kv):
+    kv = paged_kv
+    cfg = kv.cfg
+    bt = 128
+    s0 = kv.acquire(3, bt)
+    kv.write_prefill(s0, _fake_state(cfg, bt, seed=3), bt)
+    kv.register_block_pages("blkB", s0, 0, bt)
+    payload = kv.extract_block(s0, 0, bt)
+    kv.release(s0)                                 # slot gone, block pinned
+    s1 = kv.acquire(4, bt)
+    kv.share_block(s1, "blkB", 0)
+    kv.set_length(s1, bt)
+    np.testing.assert_array_equal(kv.extract_block(s1, 0, bt), payload)
+    kv.release(s1)
+    kv.drop_block_pages("blkB")
+    assert kv.allocator.in_use == 0
+
+
+def test_pool_backpressure_reclaims_pinned_blocks():
+    """A full pool unpins manager blocks (oldest first) instead of
+    crashing: long-running engines with a large tier-0 budget keep
+    admitting; dropped blocks fall back to payload injection."""
+    cfg = ModelConfig(name="tiny2", family=FAMILY_DECODER, n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=256)
+    model = build_model(cfg)
+    kv = PagedKVCache(model, n_slots=2, max_len=128, page_tokens=64,
+                      reserve_pages=4)        # 1 + 4 + 4 = 9 pages total
+    bt = 128                                  # 2 pages per block
+    for i in range(6):                        # pins would need 12 pages
+        s = kv.acquire(i, bt)
+        kv.write_prefill(s, _fake_state(cfg, bt, seed=i), bt)
+        kv.register_block_pages(f"blk{i}", s, 0, bt)
+        kv.release(s)
+    # oldest pins were reclaimed, newest survive, nothing crashed
+    assert not kv.can_share("blk0")
+    assert kv.can_share("blk5")
+    assert kv.allocator.n_free >= 0
+
+
+def test_preempt_restore_roundtrip_paged(paged_kv):
+    kv = paged_kv
+    cfg = kv.cfg
+    s = kv.acquire(5, 100)
+    kv.write_prefill(s, _fake_state(cfg, 100, seed=4), 100)
+    payload, length = kv.evict_slot_to_payload(s)
+    kv.release(s)
+    s2 = kv.acquire(6, 100)
+    kv.restore_slot(s2, payload, length)
+    np.testing.assert_array_equal(kv.extract_block(s2, 0, 100), payload)
+    kv.release(s2)

@@ -1,5 +1,6 @@
 """PredictiveCacheManager: invariants + policy separation."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_models import LLAMA3_70B

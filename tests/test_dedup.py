@@ -1,6 +1,7 @@
 """Content store, radix tree (vs dict oracle), delta checkpoints."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dedup import (CheckpointManifest, ContentStore, RadixTree,

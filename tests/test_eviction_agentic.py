@@ -1,6 +1,7 @@
 """Head tracker, eviction policies, prefetcher, Markov predictor."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import reduce_config

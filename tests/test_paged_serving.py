@@ -1,0 +1,230 @@
+"""Paged serving path: numerical equivalence of paged vs dense decode
+(f32, < 1e-4), engine-level A/B token equality, CoW prefix sharing, and
+the async tier-transfer worker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, FAMILY_DECODER, reduce_config
+from repro.configs import get_config
+from repro.core.tiers import (AsyncTierTransferWorker, TierHierarchy,
+                              TPU_V5E_TIER_SPECS, TransferRequest)
+from repro.models.model import build_model
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+GQA_CFG = ModelConfig(name="tiny-gqa", family=FAMILY_DECODER, n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=256)
+MLA_CFG = ModelConfig(name="tiny-mla", family=FAMILY_DECODER, n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                      d_ff=128, vocab_size=256, d_latent=32, d_rope=8)
+
+
+def _f32_params(model, seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return jax.tree.map(lambda a: a.astype(jnp.float32), params)
+
+
+def _paged_state_from_prefill(cfg, state, page, max_len):
+    """Dense prefill state -> page pool + block table (batch 1, f32)."""
+    n_pages_needed = -(-max_len // page)
+    n_pages = n_pages_needed + 2                 # page 0 = scratch
+    table = np.arange(1, n_pages_needed + 1, dtype=np.int32)[None]
+    mla = cfg.attention_variant == "mla"
+    key = "latent" if mla else "k"
+    L = state[key].shape[0]
+    s = state[key].shape[2]
+    out = {"block_tables": jnp.asarray(table),
+           "lengths": state["lengths"]}
+    for src_key, dst_key in ((("latent", "latent_pages"),) if mla else
+                             (("k", "k_pages"), ("v", "v_pages"))):
+        inner = state[src_key].shape[3:]
+        pool = jnp.zeros((L, n_pages, page) + inner, jnp.float32)
+        for pi in range(n_pages_needed):
+            lo, hi = pi * page, min((pi + 1) * page, s)
+            if lo >= s:
+                break
+            pool = pool.at[:, pi + 1, :hi - lo].set(
+                state[src_key][:, 0, lo:hi])
+        out[dst_key] = pool
+    return out
+
+
+def _grow(state, max_len):
+    def pad(x):
+        p = [(0, 0)] * x.ndim
+        p[2] = (0, max_len - x.shape[2])
+        return jnp.pad(x, p)
+    out = dict(state)
+    for k in ("k", "v", "latent"):
+        if k in state:
+            out[k] = pad(state[k])
+    return out
+
+
+@pytest.mark.parametrize("cfg", [GQA_CFG, MLA_CFG], ids=["gqa", "mla"])
+def test_paged_decode_matches_dense_1e4(cfg):
+    """Acceptance: paged decode logits match the dense path to < 1e-4
+    (f32 end to end; page-table indirection is the only difference)."""
+    page, max_len, steps = 64, 192, 6
+    model = build_model(cfg)
+    params = _f32_params(model)
+    prompt = jnp.asarray([list(range(10, 106))], jnp.int32)   # 96 tokens
+    logits, state = model.prefill(params, {"tokens": prompt})
+    pstate = _paged_state_from_prefill(cfg, state, page, max_len)
+    dstate = _grow(state, max_len)
+    dense_step = jax.jit(model.decode_step)
+    paged_step = jax.jit(model.decode_step_paged)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    max_err = 0.0
+    for _ in range(steps):
+        ld, dstate = dense_step(params, dstate, tok)
+        lp, pstate = paged_step(params, pstate, tok)
+        max_err = max(max_err, float(jnp.max(jnp.abs(ld - lp))))
+        assert jnp.array_equal(jnp.argmax(ld, -1), jnp.argmax(lp, -1))
+        tok = jnp.argmax(ld, -1).astype(jnp.int32)
+    assert max_err < 1e-4, f"paged vs dense max abs diff {max_err}"
+
+
+def test_engine_paged_vs_dense_identical_tokens():
+    """A/B flag: the same workload generates identical tokens (greedy)
+    through the paged and dense engines."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    outs = {}
+    for paged in (False, True):
+        eng = ServingEngine(cfg, EngineConfig(max_len=128,
+                                              kv_budget_bytes=5e5,
+                                              paged=paged))
+        assert eng.paged == paged
+        rng = np.random.default_rng(7)
+        reqs = []
+        for i in range(4):
+            toks = [int(t) for t in rng.integers(0, 250, size=48)]
+            reqs.append(eng.submit(toks,
+                                   params=SamplingParams(max_new_tokens=5)))
+        eng.run()
+        outs[paged] = [r.generated for r in reqs]
+        eng.shutdown()
+    assert outs[True] == outs[False]
+    assert all(len(g) == 5 for g in outs[True])
+
+
+def test_paged_prefix_hit_shares_pages():
+    """A radix-prefix hit maps physical pages (CoW) instead of copying,
+    and the shared-prefix request decodes the same tokens."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    eng = ServingEngine(cfg, EngineConfig(max_len=256,
+                                          kv_budget_bytes=32e6))
+    prompt = list(range(30, 158)) + [5, 6, 7] * 6       # >1 full block
+    r1 = eng.submit(prompt, params=SamplingParams(max_new_tokens=4))
+    eng.run()
+    shares_before = eng.kv.allocator.stats.shares
+    r2 = eng.submit(prompt, params=SamplingParams(max_new_tokens=4))
+    eng.run()
+    assert r2.prefix_hit_blocks > 0
+    assert eng.kv.allocator.stats.shares > shares_before
+    assert r1.generated == r2.generated
+    eng.shutdown()
+
+
+def test_mla_engine_paged_generates():
+    eng = ServingEngine(MLA_CFG, EngineConfig(max_len=256,
+                                              kv_budget_bytes=8e6))
+    assert eng.paged
+    r = eng.submit(list(range(100)), params=SamplingParams(max_new_tokens=4))
+    eng.run()
+    assert len(r.generated) == 4
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# async tier transfers
+# ---------------------------------------------------------------------------
+def test_async_worker_demote_fetch_roundtrip():
+    hier = TierHierarchy(TPU_V5E_TIER_SPECS)
+    w = AsyncTierTransferWorker(hier)
+    payload = np.arange(16, dtype=np.float32)
+    w.submit(TransferRequest("b0", 0, 1, kind="demote", payload=payload,
+                             nbytes=float(payload.nbytes), tag="1"))
+    assert w.drain(5.0)
+    (ev,) = w.poll()
+    assert ev.ok and ev.sim_time > 0
+    assert hier[1].contains("b0")
+
+    w.submit(TransferRequest("b0", 1, 0, kind="fetch", evict_src=True,
+                             tag="1"))
+    assert w.drain(5.0)
+    (ev,) = w.poll()
+    assert ev.ok
+    np.testing.assert_array_equal(ev.payload, payload)
+    assert not hier[1].contains("b0")
+
+    # failure surfaces as an event, not an exception
+    w.submit(TransferRequest("missing", 1, 0, kind="fetch"))
+    assert w.drain(5.0)
+    (ev,) = w.poll()
+    assert not ev.ok and ev.error
+    st = w.stats()
+    assert st["completed"] == 3 and st["failed"] == 1
+    assert st["in_flight"] == 0
+    w.close()
+
+
+def test_double_preemption_epochs_keep_latest_payload():
+    """preempt -> restore-from-buffer -> preempt again: the stale first
+    demote's completion event must not release the second epoch's
+    staging buffer (ticket correlation), and the final restore decodes
+    the same tokens as an uninterrupted run."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    eng = ServingEngine(cfg, EngineConfig(max_len=256,
+                                          kv_budget_bytes=32e6))
+    prompt = list(range(60, 188))
+    ref = eng.submit(prompt, params=SamplingParams(max_new_tokens=8))
+    eng.run()
+    req = eng.submit(prompt, params=SamplingParams(max_new_tokens=8))
+    eng.step()
+    eng.preempt(req)                             # epoch 1: demote #1
+    t1 = eng._demote_tickets[req.request_id]
+    # restore from the staging buffer WITHOUT polling the worker first
+    # (the demote #1 event stays queued — the stale-epoch case)
+    (r,) = eng.scheduler.admissible(1)
+    assert r is req
+    eng._admit(req, eng.kv.acquire(req.request_id, req.prompt_len))
+    eng.step()
+    eng.preempt(req)                             # epoch 2: demote #2
+    t2 = eng._demote_tickets[req.request_id]
+    assert t2 != t1
+    assert eng.worker.drain(5.0)
+    eng._poll_transfers()                        # both events arrive
+    # the buffer release was driven by the epoch-2 event, not the stale one
+    assert eng._preempted_payloads[req.request_id][0] is None
+    eng.run()
+    assert req.generated == ref.generated
+    eng.shutdown()
+
+
+def test_async_preempt_demote_then_restore():
+    """Preemption demotes off the step loop; once the write lands the
+    staging buffer is dropped and restore becomes an async tier fetch —
+    decode output is unchanged either way."""
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    eng = ServingEngine(cfg, EngineConfig(max_len=256,
+                                          kv_budget_bytes=32e6))
+    prompt = list(range(40, 168))
+    ref = eng.submit(prompt, params=SamplingParams(max_new_tokens=8))
+    eng.run()
+    req = eng.submit(prompt, params=SamplingParams(max_new_tokens=8))
+    eng.step()
+    eng.preempt(req)
+    assert req.request_id in eng._preempted_payloads
+    assert eng.worker.drain(5.0)          # demotion completed off-loop
+    eng._poll_transfers()
+    assert eng._preempted_payloads[req.request_id][0] is None
+    eng.run()                             # async fetch -> restore -> finish
+    assert req.generated == ref.generated
+    stats = eng.stats()
+    assert stats["scheduler"]["async_restores"] >= 1
+    assert stats["async_transfers"]["completed"] >= 2
+    assert stats["async_transfers"]["failed"] == 0
+    eng.shutdown()

@@ -17,17 +17,23 @@ def test_logical_to_pspec():
     assert ps == P(("pod", "data"), None, "model")
 
 
+def _make_mesh():
+    """1x1 mesh across jax versions (AxisType landed after 0.4.37)."""
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((1, 1), ("data", "model"), **kw)
+
+
 def test_evenly_shardable_drops_indivisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh()
     # 1-device mesh: everything trivially divisible
     ps = shlib._evenly_shardable(P("model"), (10,), mesh)
     assert ps == P("model")
 
 
 def test_zero1_shards_largest_free_dim():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh()
     ps = shlib.zero1_spec(P(None, "model"), (8, 16), mesh, axis="data")
     assert ps == P("data", "model")
 
@@ -81,8 +87,7 @@ def test_hlocost_backend_config_trip():
 
 
 def test_batch_shardings_replicate_small_batch():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _make_mesh()
     tree = {"tokens": jax.ShapeDtypeStruct((1, 8), jnp.int32)}
     sh = shlib.batch_shardings(tree, mesh)
     # batch=1 on size-1 axes: sharded-over-1 == replicated, both legal

@@ -3,6 +3,7 @@ property-based invariants."""
 import math
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import ModelConfig, FAMILY_DECODER

@@ -1,5 +1,6 @@
 """Tier hierarchy: capacity invariants, moves, failure, hash ring."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError,
