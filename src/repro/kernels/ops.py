@@ -14,6 +14,8 @@ from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.mla_paged_decode import mla_paged_decode
 from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_prefill import (mla_paged_prefill,
+                                         paged_prefill_attention)
 
 
 def _on_tpu() -> bool:
@@ -49,6 +51,28 @@ def mla_decode(q_lat, q_rope, latent_pages, block_tables, lengths,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill(q, k_chunk, v_chunk, k_pages, v_pages, block_tables,
+                  offsets, interpret: bool | None = None):
+    """Chunked prefill: full attention to pool tokens < offset (block
+    table indirection) + causal attention within the chunk."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    return paged_prefill_attention(q, k_chunk, v_chunk, k_pages, v_pages,
+                                   block_tables, offsets, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("d_latent", "scale",
+                                             "interpret"))
+def mla_prefill(q_lat, q_rope, lat_chunk, latent_pages, block_tables,
+                offsets, d_latent: int, scale: float | None = None,
+                interpret: bool | None = None):
+    """Absorbed-MLA chunked prefill over latent pages."""
+    it = (not _on_tpu()) if interpret is None else interpret
+    return mla_paged_prefill(q_lat, q_rope, lat_chunk, latent_pages,
+                             block_tables, offsets, d_latent=d_latent,
+                             scale=scale, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
                       block_tables, lengths, interpret: bool | None = None):
     from repro.kernels.paged_attention import paged_decode_attention_int8
@@ -62,3 +86,5 @@ def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
 paged_decode_ref = ref.paged_decode_attention_ref
 flash_causal_ref = ref.flash_prefill_ref
 mla_decode_ref = ref.mla_paged_decode_ref
+paged_prefill_ref = ref.paged_prefill_attention_ref
+mla_prefill_ref = ref.mla_paged_prefill_ref

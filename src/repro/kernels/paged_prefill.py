@@ -1,0 +1,277 @@
+"""Chunked prefill over a paged KV pool — Pallas TPU kernels.
+
+The unified token-budget step loop (Sarathi-style mixed batches) feeds
+prompt *chunks* through these kernels: a fixed-size block of C query
+tokens attends with full attention to the request's already-resident
+KV pages (block-table indirection, exactly like the paged decode
+kernels) and causally to the chunk's own freshly-projected KV, which
+arrives as a dense operand and is only scattered into the pool *after*
+the layer stack runs.
+
+Grid: (batch, n_pages + 1).  Page iterations stream prior pages through
+VMEM; iterations at or past the offset are compute-gated (``pl.when``)
+AND their index map clamps to the last useful page, so the pipeline
+elides the redundant DMA (consecutive identical block indices reuse the
+staged copy) — a chunk early in the prompt pays for no empty pages.
+The final grid step attends the chunk against itself with a causal
+mask and writes the output.  Flash
+softmax stats (m, l, acc) persist in VMEM scratch across the sequential
+page iterations; the block table and per-request offsets are
+scalar-prefetch operands, so page resolution happens on the scalar core
+ahead of the DMA.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(
+    # scalar-prefetch operands
+    block_tables_ref,      # [B, P] int32
+    offsets_ref,           # [B] int32  (tokens already resident in pages)
+    # array operands (blocked)
+    q_ref,                 # [1, C, Hq, hd]
+    kc_ref,                # [1, C, Hkv, hd]  chunk KV (not yet in the pool)
+    vc_ref,                # [1, C, Hkv, hd]
+    kp_ref,                # [1, page, Hkv, hd]  pool page
+    vp_ref,                # [1, page, Hkv, hd]
+    # outputs
+    o_ref,                 # [1, C, Hq, hd]
+    # scratch
+    m_ref,                 # [C, Hq] f32
+    l_ref,                 # [C, Hq] f32
+    acc_ref,               # [C, Hq, hd] f32
+    *, page: int, n_prior: int, chunk: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    offset = offsets_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update(s, v, hkv, g):
+        """Online-softmax update; s [C, Hq, T], v [T, Hkv, hd]."""
+        m_prev = m_ref[...]                              # [C, Hq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new[..., None])             # [C, Hq, T]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(prob, axis=-1)
+        pg = prob.reshape(chunk, hkv, g, -1)
+        pv = jnp.einsum("chgt,thd->chgd", pg, v)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            pv.reshape(chunk, -1, v.shape[-1])
+        m_ref[...] = m_new
+
+    # full attention to prior pages (tokens < offset); pages at or past
+    # the offset hold no prior KV and are skipped outright
+    @pl.when((p < n_prior) & (p * page < offset))
+    def _prior():
+        q = q_ref[0].astype(jnp.float32)                 # [C, Hq, hd]
+        k = kp_ref[0].astype(jnp.float32)                # [page, Hkv, hd]
+        v = vp_ref[0].astype(jnp.float32)
+        c, hq, hd = q.shape
+        hkv = k.shape[1]
+        g = hq // hkv
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(c, hkv, g, hd)
+        s = jnp.einsum("chgd,thd->chgt", qg, k).reshape(c, hq, page) * scale
+        pos = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page), 2)
+        s = jnp.where(pos < offset, s, NEG_INF)
+        _update(s, v, hkv, g)
+
+    # causal attention within the chunk itself, then finalize (the chunk
+    # step is the last grid iteration)
+    @pl.when(p == n_prior)
+    def _chunk():
+        q = q_ref[0].astype(jnp.float32)
+        k = kc_ref[0].astype(jnp.float32)                # [C, Hkv, hd]
+        v = vc_ref[0].astype(jnp.float32)
+        c, hq, hd = q.shape
+        hkv = k.shape[1]
+        g = hq // hkv
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(c, hkv, g, hd)
+        s = jnp.einsum("chgd,thd->chgt", qg, k).reshape(c, hq, c) * scale
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (c, 1, c), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (c, 1, c), 2)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        _update(s, v, hkv, g)
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_chunk: jax.Array,
+                            v_chunk: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_tables: jax.Array,
+                            offsets: jax.Array, *,
+                            interpret: bool = True) -> jax.Array:
+    """q [B,C,Hq,hd]; k/v_chunk [B,C,Hkv,hd]; k/v_pages [N,page,Hkv,hd];
+    block_tables [B,P] int32; offsets [B] int32 -> out [B,C,Hq,hd].
+
+    Query i of request b sits at absolute position offsets[b] + i: it
+    attends every pool token < offsets[b] through the block table, plus
+    chunk tokens j <= i.  The chunk's KV must NOT yet be written to the
+    pool (it is passed densely) — the caller scatters it afterwards via
+    ``PagedKVCache.write_chunk``.
+    """
+    b, c, hq, hd = q.shape
+    n, page, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+
+    def _page_idx(bi, pi, bt, off):
+        # iterations at/past the offset (and the final chunk step) read
+        # no pool page: clamp to the last page holding prior tokens so
+        # consecutive identical indices elide the DMA entirely
+        last_useful = jnp.maximum((off[bi] + page - 1) // page - 1, 0)
+        return (bt[bi, jnp.minimum(pi, jnp.minimum(last_useful,
+                                                   p_max - 1))], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, p_max + 1),
+        in_specs=[
+            pl.BlockSpec((1, c, hq, hd), lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hkv, hd), lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hkv, hd), lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, page, hkv, hd), _page_idx),
+            pl.BlockSpec((1, page, hkv, hd), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, c, hq, hd),
+                               lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq, hd), jnp.float32),
+        ],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_prefill_kernel, page=page, n_prior=p_max,
+                          chunk=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hq, hd), q.dtype),
+        interpret=interpret,
+    )
+    return kernel(block_tables, offsets, q, k_chunk, v_chunk,
+                  k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Absorbed-MLA chunked prefill: queries move into latent space, pages are
+# dense [page, dl+dr] strips shared by all heads (same layout as
+# kernels/mla_paged_decode.py), so one matmul per page serves every head.
+# ---------------------------------------------------------------------------
+def _mla_prefill_kernel(block_tables_ref, offsets_ref, q_lat_ref,
+                        q_rope_ref, lat_chunk_ref, lat_page_ref, o_ref,
+                        m_ref, l_ref, acc_ref,
+                        *, page: int, n_prior: int, chunk: int,
+                        d_latent: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    offset = offsets_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update(s, c_kv):
+        m_prev = m_ref[...]                              # [C, Hq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new[..., None])             # [C, Hq, T]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(prob, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("cht,tl->chl", prob, c_kv)
+        m_ref[...] = m_new
+
+    @pl.when((p < n_prior) & (p * page < offset))
+    def _prior():
+        ql = q_lat_ref[0].astype(jnp.float32)            # [C, Hq, dl]
+        qr = q_rope_ref[0].astype(jnp.float32)           # [C, Hq, dr]
+        lat = lat_page_ref[0].astype(jnp.float32)        # [page, dl+dr]
+        c_kv, kr = lat[:, :d_latent], lat[:, d_latent:]
+        s = (jnp.einsum("chl,tl->cht", ql, c_kv)
+             + jnp.einsum("chr,tr->cht", qr, kr)) * scale
+        pos = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, page), 2)
+        s = jnp.where(pos < offset, s, NEG_INF)
+        _update(s, c_kv)
+
+    @pl.when(p == n_prior)
+    def _chunk():
+        ql = q_lat_ref[0].astype(jnp.float32)
+        qr = q_rope_ref[0].astype(jnp.float32)
+        lat = lat_chunk_ref[0].astype(jnp.float32)       # [C, dl+dr]
+        c_kv, kr = lat[:, :d_latent], lat[:, d_latent:]
+        s = (jnp.einsum("chl,tl->cht", ql, c_kv)
+             + jnp.einsum("chr,tr->cht", qr, kr)) * scale
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, chunk), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, chunk), 2)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        _update(s, c_kv)
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def mla_paged_prefill(q_lat: jax.Array, q_rope: jax.Array,
+                      lat_chunk: jax.Array, latent_pages: jax.Array,
+                      block_tables: jax.Array, offsets: jax.Array, *,
+                      d_latent: int, scale: float = None,
+                      interpret: bool = True) -> jax.Array:
+    """q_lat [B,C,Hq,dl]; q_rope [B,C,Hq,dr]; lat_chunk [B,C,dl+dr];
+    latent_pages [N,page,dl+dr]; -> ctx [B,C,Hq,dl] (caller applies
+    W_uv + the output projection, as in the paged decode kernel)."""
+    b, c, hq, dl = q_lat.shape
+    dr = q_rope.shape[-1]
+    n, page, dtot = latent_pages.shape
+    p_max = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dl // 4 + dr)  # ref-oracle convention
+
+    def _page_idx(bi, pi, bt, off):
+        last_useful = jnp.maximum((off[bi] + page - 1) // page - 1, 0)
+        return (bt[bi, jnp.minimum(pi, jnp.minimum(last_useful,
+                                                   p_max - 1))], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, p_max + 1),
+        in_specs=[
+            pl.BlockSpec((1, c, hq, dl), lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hq, dr), lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, dtot), lambda bi, pi, bt, off: (bi, 0, 0)),
+            pl.BlockSpec((1, page, dtot), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, c, hq, dl),
+                               lambda bi, pi, bt, off: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq, dl), jnp.float32),
+        ],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_mla_prefill_kernel, page=page, n_prior=p_max,
+                          chunk=c, d_latent=dl, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hq, dl), q_lat.dtype),
+        interpret=interpret,
+    )
+    return kernel(block_tables, offsets, q_lat, q_rope, lat_chunk,
+                  latent_pages)

@@ -61,6 +61,70 @@ def mla_paged_decode_ref(q_lat, q_rope, latent_pages, block_tables,
                          ).astype(q_lat.dtype)
 
 
+def paged_prefill_attention_ref(q, k_chunk, v_chunk, k_pages, v_pages,
+                                block_tables, offsets) -> jax.Array:
+    """Chunked-prefill oracle: q [B,C,Hq,hd] at positions offset+i attends
+    pool tokens < offset (via block table) plus chunk tokens j <= i."""
+    b, c, hq, hd = q.shape
+    n, page, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    g = hq // hkv
+
+    def one(qb, kc, vc, bt, off):
+        kp = k_pages[bt].reshape(p_max * page, hkv, hd)
+        vp = v_pages[bt].reshape(p_max * page, hkv, hd)
+        k = jnp.concatenate([kp, kc], axis=0)            # [T, Hkv, hd]
+        v = jnp.concatenate([vp, vc], axis=0)
+        qg = qb.reshape(c, hkv, g, hd).astype(jnp.float32)
+        s = jnp.einsum("chgd,thd->chgt", qg, k.astype(jnp.float32))
+        s = s.reshape(c, hq, -1) / math.sqrt(hd)
+        pos = jnp.arange(p_max * page + c)
+        prior = pos[None, :] < off                       # pool tokens
+        causal = (pos[None, :] >= p_max * page) & \
+            (pos[None, :] - p_max * page <= jnp.arange(c)[:, None])
+        mask = prior | causal                            # [C, T]
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("cht,thd->chd",
+                       p.reshape(c, hq, -1),
+                       jnp.repeat(v, g, axis=1).astype(jnp.float32))
+        return o
+
+    return jax.vmap(one)(q, k_chunk, v_chunk, block_tables, offsets
+                         ).astype(q.dtype)
+
+
+def mla_paged_prefill_ref(q_lat, q_rope, lat_chunk, latent_pages,
+                          block_tables, offsets, d_latent: int,
+                          scale: float = None) -> jax.Array:
+    """Absorbed-MLA chunked-prefill oracle -> ctx [B,C,Hq,dl]."""
+    b, c, hq, dl = q_lat.shape
+    dr = q_rope.shape[-1]
+    n, page, dtot = latent_pages.shape
+    p_max = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dl // 4 + dr)
+
+    def one(ql, qr, lc, bt, off):
+        lat = jnp.concatenate(
+            [latent_pages[bt].reshape(p_max * page, dtot), lc], axis=0)
+        c_kv, kr = lat[:, :dl], lat[:, dl:]
+        s = (jnp.einsum("chl,tl->cht", ql.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+             + jnp.einsum("chr,tr->cht", qr.astype(jnp.float32),
+                          kr.astype(jnp.float32))) * scale
+        pos = jnp.arange(p_max * page + c)
+        prior = pos[None, :] < off
+        causal = (pos[None, :] >= p_max * page) & \
+            (pos[None, :] - p_max * page <= jnp.arange(c)[:, None])
+        s = jnp.where((prior | causal)[:, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("cht,tl->chl", p, c_kv.astype(jnp.float32))
+
+    return jax.vmap(one)(q_lat, q_rope, lat_chunk, block_tables, offsets
+                         ).astype(q_lat.dtype)
+
+
 def flash_prefill_ref(q, k, v) -> jax.Array:
     """Causal attention oracle. q [B,S,Hq,hd], k/v [B,S,Hkv,hd]."""
     b, s, hq, hd = q.shape

@@ -131,6 +131,15 @@ class Model:
         raise NotImplementedError(
             f"{type(self).__name__} has no paged decode path")
 
+    def supports_chunked_prefill(self) -> bool:
+        """Whether prefill_chunk is available for this config."""
+        return False
+
+    def prefill_chunk(self, params: Params, state: DecodeState,
+                      tokens: jax.Array, offset: jax.Array) -> Dict:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no chunked prefill path")
+
     # -- dry-run inputs -------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every input of the entry point."""
@@ -607,6 +616,77 @@ class DecoderModel(Model):
 
         x = rms_norm(x[:, 0], params["ln_f"], cfg.norm_eps)
         return self._logits(params, x), new_state
+
+    # -- chunked prefill (token-budget mixed batches; serving fast path) -----
+    def supports_chunked_prefill(self) -> bool:
+        return self.supports_paged_decode()
+
+    def prefill_chunk(self, params, state, tokens, offset):
+        """Prefill a fixed-size prompt chunk against the request's
+        already-resident paged KV.
+
+        tokens [1, C] int32 (zero-padded past the valid suffix); offset
+        [1] int32 — tokens already written to this slot's pages; state:
+        {"k_pages"/"v_pages"} (or MLA {"latent_pages"}) + "block_table"
+        [1, P] int32.  Attention is causal within the chunk and full
+        over pool tokens < offset (kernels/paged_prefill.py).  Returns
+        the chunk's per-layer KV ({"k"/"v"} [L,1,C,Hkv,hd] or
+        {"latent"} [L,1,C,dl+dr]) for the caller to scatter into the
+        pool via ``PagedKVCache.write_chunk`` — logits are never needed:
+        the first decode step consumes the final prompt token.
+        """
+        from repro.kernels import ops
+
+        cfg = self.cfg
+        c = tokens.shape[1]
+        x = self._embed(params, tokens)
+        positions = offset[:, None] + jnp.arange(c)[None, :]
+        bt = state["block_table"]
+
+        if cfg.attention_variant == MLA:
+            dl, dr = cfg.d_latent, cfg.d_rope
+            scale = 1.0 / math.sqrt(cfg.hd + dr)
+
+            def layer_fn(x, inp):
+                lp, latp = inp
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                q_nope, q_rope, latent = attn.mla_project(
+                    lp["attn"], h, positions, cfg)
+                q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
+                                   lp["attn"]["w_uk"])
+                ctx = ops.mla_prefill(q_lat, q_rope, latent, latp, bt,
+                                      offset, d_latent=dl, scale=scale)
+                out = jnp.einsum("bshl,lhk->bshk", ctx, lp["attn"]["w_uv"])
+                o = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+                x = x + o
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                f, _ = self._ffn(lp, h)
+                return x + f, latent
+
+            _, lats = jax.lax.scan(layer_fn, x,
+                                   (params["layers"],
+                                    state["latent_pages"]))
+            return {"latent": lats}
+
+        def layer_fn(x, inp):
+            lp, kp, vp = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn.project_qkv(lp["attn"], h, positions, cfg,
+                                       shd=NOSHARD)
+            o = ops.paged_prefill(q, k, v, kp, vp, bt, offset)
+            mask = attn.head_mask(cfg, o.dtype)
+            if mask is not None:
+                o = o * mask              # zero padded layout heads
+            o = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            x = x + o
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            f, _ = self._ffn(lp, h)
+            return x + f, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(
+            layer_fn, x,
+            (params["layers"], state["k_pages"], state["v_pages"]))
+        return {"k": ks, "v": vs}
 
     # -- decode state ----------------------------------------------------------
     def decode_state_specs(self, batch, max_len):

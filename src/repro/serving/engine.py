@@ -1,4 +1,5 @@
-"""The serving engine: continuous batching over a paged block-table KV
+"""The serving engine: a unified token-budget step loop mixing chunked
+prefill with decode in one batch per step, over a paged block-table KV
 cache (dense slots as ``paged=False`` fallback), with the paper's
 predictive multi-tier cache manager on the prompt-block level and an
 async tier-transfer worker off the step loop.
@@ -9,25 +10,39 @@ Per step:
   2. admit waiting requests into free slots — radix-tree prefix match
      maps pool-resident prefix pages straight into the new request's
      block table (copy-on-write sharing; lower-tier blocks are copied
-     from their payloads), then prefill runs only on the unmatched
-     suffix;
-  3. one batched decode over all active slots through the Pallas paged
+     from their payloads) and advances the prefill chunk cursor for
+     free; the unmatched suffix enters ``Phase.PREFILL``;
+  3. budget-select the mixed batch (``Scheduler.plan_step``): every
+     decode stream gets one token, prefill chunks fill the rest of
+     ``max_step_tokens`` — a 4k-token prompt never stalls running
+     decodes;
+  4. granted prefill chunks run through the block-table-aware Pallas
+     flash-prefill kernels (causal within the chunk, full attention to
+     prior pages) and scatter into the pool via
+     ``PagedKVCache.write_chunk``; a request whose cursor reaches the
+     prompt end transitions PREFILL -> DECODE;
+  5. one batched decode over the decoding slots through the Pallas paged
      attention kernels (block-table indirection; MLA uses the absorbed
      latent kernel); sample next tokens;
-  4. finished requests release their slot's page references (refcounted;
+  6. finished requests release their slot's page references (refcounted;
      manager-pinned prefix pages linger for cross-request reuse);
-  5. RoPE prefetch promotions are submitted to the transfer worker
+  7. RoPE prefetch promotions are submitted to the transfer worker
      instead of running inline;
-  6. stragglers are preempted: their KV payload is handed to the async
-     worker for demotion (double-buffered — an immediate restore is
-     served from the staging buffer; after the write lands, restore is
-     an async fetch the scheduler waits on without blocking decode).
+  8. stragglers (per-phase deadline) are preempted: their KV payload is
+     handed to the async worker for demotion (double-buffered — an
+     immediate restore is served from the staging buffer; after the
+     write lands, restore is an async fetch the scheduler waits on
+     without blocking decode).
+
+``EngineConfig(chunked_prefill=False)`` (and the dense ``paged=False``
+layout, which has no paged pool to chunk into) falls back to the
+original monolithic prefill-at-admission for A/B comparison.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +56,7 @@ from repro.core.tiers import (TPU_V5E_TIER_SPECS, AsyncTierTransferWorker,
 from repro.models.model import build_model
 from repro.serving import sampler as sampler_mod
 from repro.serving.kvcache import PagedKVCache, SlotKVCache
-from repro.serving.request import Request, SamplingParams
+from repro.serving.request import Phase, Request, SamplingParams
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
@@ -61,11 +76,19 @@ class EngineConfig:
     paged: bool = True                # block-table KV pool (False: dense A/B)
     page_tokens: int = 64             # physical page size (kernel tile)
     async_transfers: bool = True      # tier moves off the step loop
+    chunked_prefill: bool = True      # mixed token-budget batches
+    #                                   (False: monolithic prefill A/B)
+    prefill_chunk_tokens: int = 64    # kernel chunk size (jit cache)
+    max_step_tokens: int = 256        # per-step token budget
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig = EngineConfig(),
+    def __init__(self, cfg: ModelConfig,
+                 engine_cfg: Optional[EngineConfig] = None,
                  params=None, rng: Optional[jax.Array] = None):
+        # a fresh EngineConfig per engine: a shared default instance
+        # would leak config mutations across engines
+        engine_cfg = EngineConfig() if engine_cfg is None else engine_cfg
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.model = build_model(cfg)
@@ -76,7 +99,8 @@ class ServingEngine:
             kv_budget_bytes=engine_cfg.kv_budget_bytes,
             max_len=engine_cfg.max_len,
             deadline_s=engine_cfg.deadline_s,
-            status_quo_sizing=engine_cfg.status_quo_sizing))
+            status_quo_sizing=engine_cfg.status_quo_sizing,
+            max_step_tokens=engine_cfg.max_step_tokens))
         self.paged = engine_cfg.paged and self.model.supports_paged_decode()
         if self.paged:
             bt = sizing.block_tokens(cfg)
@@ -107,8 +131,11 @@ class ServingEngine:
             enable_multi_tier=engine_cfg.enable_multi_tier)
         self.worker = (AsyncTierTransferWorker(self.manager.hierarchy)
                        if engine_cfg.async_transfers else None)
+        self.chunked = (engine_cfg.chunked_prefill and self.paged
+                        and self.model.supports_chunked_prefill())
         self._rng = jax.random.PRNGKey(engine_cfg.seed + 1)
         self._prefill = jax.jit(self.model.prefill)
+        self._prefill_chunk = jax.jit(self.model.prefill_chunk)
         # request_id -> [payload | None, length]; payload is the staging
         # buffer — dropped once the async demotion write lands
         self._preempted_payloads: Dict[int, list] = {}
@@ -117,9 +144,21 @@ class ServingEngine:
         self._demote_tickets: Dict[int, int] = {}
         self._inflight_prefetch: set = set()
         self._session_tool: Dict[str, Optional[str]] = {}
+        # block-registration epoch: _extend_prefix only re-walks the
+        # radix tree when new blocks appeared since the request's last
+        # match (request_id -> epoch seen)
+        self._block_epoch = 0
+        self._prefix_checked: Dict[int, int] = {}
+        # admission-time agentic transition, reused by mid-prefill
+        # prefix accesses so the Bayesian posteriors see the right pair
+        self._admit_transition: Dict[int, str] = {}
         self.steps = 0
         self.idle_transfer_waits = 0   # run() iterations with only
         #                                restores in flight (no decode work)
+        self.prefill_chunks = 0        # kernel chunk calls
+        self.prefill_tokens_total = 0  # prompt tokens through the chunk path
+        self.last_step_prefill_tokens = 0
+        self.max_step_prefill_tokens = 0   # budget-compliance witness
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], *, params: SamplingParams = None,
@@ -129,9 +168,13 @@ class ServingEngine:
                       params=params or SamplingParams(),
                       session_id=session_id, block_type=block_type,
                       tool=tool)
-        pad = self.ecfg.pad_prefill_to
-        need = ((req.prompt_len + pad - 1) // pad) * pad \
-            + req.params.max_new_tokens + 1
+        if self.chunked:
+            # chunked prefill writes only valid tokens (no pad rounding)
+            need = req.prompt_len + req.params.max_new_tokens + 1
+        else:
+            pad = self.ecfg.pad_prefill_to
+            need = ((req.prompt_len + pad - 1) // pad) * pad \
+                + req.params.max_new_tokens + 1
         if need > self.ecfg.max_len:
             raise ValueError(
                 f"request needs {need} cache slots > max_len "
@@ -161,7 +204,12 @@ class ServingEngine:
             payload, length = self._preempted_payloads.pop(req.request_id)
             self.kv.restore_slot(slot, payload, length)
             self._drop_tier_copy(req.request_id)
-            self.scheduler.start(req, slot)
+            if req.prefill_left > 0:
+                # preempted mid-prompt: the restored KV covers the chunk
+                # cursor; resume chunked prefill where it left off
+                self.scheduler.start_prefill(req, slot)
+            else:
+                self.scheduler.start(req, slot)
             return
 
         # prefill covers tokens[:-1]; the first decode step consumes the
@@ -171,6 +219,7 @@ class ServingEngine:
         # context is re-prefilled.
         tokens_all = list(req.prompt) + list(req.generated)
         effective = tokens_all[:-1]
+        req.prefill_tokens, req.prefill_pos = None, 0
         matched = mgr.match_prefix(effective)
         prefix_len, n_hit = 0, 0
         for bid in matched:
@@ -189,7 +238,23 @@ class ServingEngine:
             n_hit += 1
         req.prefix_hit_blocks = n_hit
 
-        # prefill the unmatched suffix
+        if self.chunked:
+            # token-budget path: prefix-hit blocks advance the chunk
+            # cursor for free; the suffix streams through plan_step()
+            req.prefill_tokens = effective
+            req.prefill_pos = prefix_len
+            self._prefix_checked[req.request_id] = self._block_epoch
+            self._admit_transition[req.request_id] = transition
+            self.kv.set_length(slot, prefix_len)
+            if req.prefill_left == 0:
+                self.scheduler.start_prefill(req, slot)
+                self._finish_prefill(req)
+            else:
+                self.scheduler.start_prefill(req, slot)
+            return
+
+        # monolithic fallback (dense layout / --no-chunked A/B): prefill
+        # the whole unmatched suffix in one forward
         suffix = list(effective[prefix_len:])
         pad = self.ecfg.pad_prefill_to
         padded_len = max(pad, ((len(suffix) + pad - 1) // pad) * pad)
@@ -208,8 +273,15 @@ class ServingEngine:
             self.kv.write_range(slot, state1, prefix_len, padded_len)
         # true sequence length (padding tokens are masked by length)
         self.kv.set_length(slot, len(effective))
+        self._register_prompt_blocks(req, slot, effective)
+        self.scheduler.start(req, slot)
 
-        # register this prompt's full blocks with the manager
+    def _register_prompt_blocks(self, req: Request, slot: int,
+                                effective: Sequence[int]) -> None:
+        """Register the prompt's full blocks with the cache manager and
+        pin their pool pages for cross-request reuse."""
+        mgr = self.manager
+        bt = mgr.block_tokens
         n_full = (len(effective) // bt) * bt
         new_ids = mgr.register_sequence(
             list(effective[:n_full]), block_type=req.block_type,
@@ -220,7 +292,76 @@ class ServingEngine:
             if self.paged:
                 self.kv.register_block_pages(bid, slot, i * bt, bt)
         req.block_ids = new_ids
-        self.scheduler.start(req, slot)
+        if new_ids:
+            self._block_epoch += 1
+
+    # ------------------------------------------------------------------
+    # chunked prefill (token-budget mixed batches)
+    # ------------------------------------------------------------------
+    def _finish_prefill(self, req: Request) -> None:
+        """Chunk cursor reached the prompt end: register prompt blocks
+        and transition PREFILL -> DECODE."""
+        self._register_prompt_blocks(req, req.slot, req.prefill_tokens)
+        self._prefix_checked.pop(req.request_id, None)
+        self._admit_transition.pop(req.request_id, None)
+        self.scheduler.begin_decode(req)
+
+    def _extend_prefix(self, req: Request) -> int:
+        """Mid-prefill prefix extension: blocks registered since this
+        request was admitted (e.g. by a sibling sharing the same system
+        prompt, finished earlier this step) advance the chunk cursor for
+        free — zero prompt tokens spent from the step budget."""
+        mgr, bt = self.manager, self.manager.block_tokens
+        if req.prefill_pos % bt != 0:
+            return 0
+        if self._prefix_checked.get(req.request_id) == self._block_epoch:
+            return 0               # nothing registered since last match
+        self._prefix_checked[req.request_id] = self._block_epoch
+        transition = self._admit_transition.get(req.request_id,
+                                                "reasoning_step")
+        matched = mgr.match_prefix(req.prefill_tokens)
+        advanced = 0
+        for i in range(req.prefill_pos // bt, len(matched)):
+            bid = matched[i]
+            res = mgr.access(bid, transition=transition)
+            if res.recomputed:
+                break                  # payload lost -> compute the rest
+            if self.kv.can_share(bid):
+                self.kv.share_block(req.slot, bid, i * bt)
+            else:
+                pl = mgr._payloads.get(bid)
+                if pl is None:
+                    break
+                self.kv.inject_block(req.slot, pl, i * bt)
+            req.prefill_pos += bt
+            req.prefix_hit_blocks += 1
+            advanced += bt
+            self.kv.set_length(req.slot, req.prefill_pos)
+        return advanced
+
+    def _run_prefill_chunks(self, req: Request, n_tokens: int) -> int:
+        """Advance ``req``'s chunk cursor by up to ``n_tokens`` prompt
+        tokens in fixed-size kernel chunks (prefix-hit blocks at the
+        cursor advance it for free); returns budget tokens consumed."""
+        C = self.ecfg.prefill_chunk_tokens
+        toks = req.prefill_tokens
+        done = 0
+        self._extend_prefix(req)
+        while done < n_tokens and req.prefill_pos < len(toks):
+            n = min(C, n_tokens - done, len(toks) - req.prefill_pos)
+            chunk = list(toks[req.prefill_pos:req.prefill_pos + n])
+            arr = jnp.asarray([chunk + [0] * (C - n)], jnp.int32)
+            off = jnp.asarray([req.prefill_pos], jnp.int32)
+            state1 = self._prefill_chunk(
+                self.params, self.kv.chunk_state(req.slot), arr, off)
+            self.kv.write_chunk(req.slot, state1, req.prefill_pos, n)
+            req.prefill_pos += n
+            done += n
+            self.prefill_chunks += 1
+            self._extend_prefix(req)
+        if req.prefill_left == 0:
+            self._finish_prefill(req)
+        return done
 
     def _block_recompute_cost(self) -> float:
         """Seconds to re-prefill one block on the target chip."""
@@ -294,7 +435,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration; returns #tokens generated."""
+        """One engine iteration (poll transfers -> admit -> budget-select
+        -> prefill chunks -> batched decode -> sample/finish); returns
+        #tokens generated."""
         sch = self.scheduler
         # completion events (scheduler polls; engine interprets)
         self._poll_transfers()
@@ -311,47 +454,63 @@ class ServingEngine:
             self._admit(req, slot)
         if not sch.running:
             return 0
-        # batched decode over all slots
-        tokens = np.zeros((self.kv.n_slots,), np.int32)
-        for req in sch.running.values():
-            last = (req.generated[-1] if req.generated
-                    else req.prompt[-1])
-            tokens[req.slot] = last
-        self._rng, step_rng = jax.random.split(self._rng)
-        if self.paged:
-            state = self.kv.decode_state()
-            logits, new_state = self._decode(self.params, state,
-                                             jnp.asarray(tokens))
-            self.kv.absorb(new_state)
-        else:
-            logits, self.kv.state = self._decode(
-                self.params, self.kv.state, jnp.asarray(tokens))
+        # budget-select the mixed batch: the decode set is snapshotted
+        # *before* prefill runs, so this step's token count is bounded
+        # by max_step_tokens even when a chunk finishes a prompt
+        decode_reqs, grants = sch.plan_step()
+        prefill_tokens = 0
+        for req, n in grants:
+            prefill_tokens += self._run_prefill_chunks(req, n)
+        self.last_step_prefill_tokens = prefill_tokens
+        self.max_step_prefill_tokens = max(self.max_step_prefill_tokens,
+                                           prefill_tokens)
+        self.prefill_tokens_total += prefill_tokens
         produced = 0
-        now = time.monotonic()
-        by_slot = {r.slot: r for r in sch.running.values()}
-        # per-request sampling (params differ per request)
-        for slot, req in sorted(by_slot.items()):
-            self._rng, r = jax.random.split(self._rng)
-            tok = sampler_mod.sample(
-                logits[slot:slot + 1], r,
-                temperature=req.params.temperature,
-                top_k=req.params.top_k, top_p=req.params.top_p)
-            req.generated.append(int(tok[0]))
-            if req.t_first_token is None:
-                req.t_first_token = now
-            produced += 1
-            self.kv.slots[slot].length += 1
-            # RoPE prefetch hook: promote blocks around the decode
-            # position (async when the transfer worker is on)
-            if req.block_ids:
-                self._submit_prefetch(req.block_ids,
-                                      self.kv.slots[slot].length)
-        # lengths already advanced; sync infos + finish bookkeeping
-        for slot, req in by_slot.items():
-            if req.finished() or req.total_len >= self.ecfg.max_len - 1:
-                self.manager.release_sequence(req.block_ids)
-                sch.finish(req)
-                self.kv.release(req.slot)
+        if decode_reqs:
+            # batched decode over the decoding slots
+            tokens = np.zeros((self.kv.n_slots,), np.int32)
+            for req in decode_reqs:
+                last = (req.generated[-1] if req.generated
+                        else req.prompt[-1])
+                tokens[req.slot] = last
+            # advance the stream once per step (per-request sampling keys
+            # are split below)
+            self._rng, _ = jax.random.split(self._rng)
+            if self.paged:
+                state = self.kv.decode_state(
+                    [r.slot for r in decode_reqs])
+                logits, new_state = self._decode(self.params, state,
+                                                 jnp.asarray(tokens))
+                self.kv.absorb(new_state)
+            else:
+                logits, self.kv.state = self._decode(
+                    self.params, self.kv.state, jnp.asarray(tokens))
+            now = time.monotonic()
+            by_slot = {r.slot: r for r in decode_reqs}
+            # per-request sampling (params differ per request)
+            for slot, req in sorted(by_slot.items()):
+                self._rng, r = jax.random.split(self._rng)
+                tok = sampler_mod.sample(
+                    logits[slot:slot + 1], r,
+                    temperature=req.params.temperature,
+                    top_k=req.params.top_k, top_p=req.params.top_p)
+                req.generated.append(int(tok[0]))
+                if req.t_first_token is None:
+                    req.t_first_token = now
+                produced += 1
+                self.kv.slots[slot].length += 1
+                # RoPE prefetch hook: promote blocks around the decode
+                # position (async when the transfer worker is on)
+                if req.block_ids:
+                    self._submit_prefetch(req.block_ids,
+                                          self.kv.slots[slot].length)
+            # lengths already advanced; sync infos + finish bookkeeping
+            for slot, req in by_slot.items():
+                if (req.finished()
+                        or req.total_len >= self.ecfg.max_len - 1):
+                    self.manager.release_sequence(req.block_ids)
+                    sch.finish(req)
+                    self.kv.release(req.slot)
         if self.paged:
             # unpin pages of blocks the manager demoted or dropped
             self.kv.gc_blocks(self.manager)
@@ -364,6 +523,13 @@ class ServingEngine:
         """Demote a running request's KV into the tier hierarchy —
         asynchronously when the transfer worker is on (the step loop
         never waits on the write)."""
+        if req.phase is Phase.PREFILL and req.prefill_pos <= 0:
+            # nothing prefilled yet: no KV worth demoting — release the
+            # slot and requeue for a fresh prefill
+            req.prefill_tokens, req.prefill_pos = None, 0
+            self.kv.release(req.slot)
+            self.scheduler.preempt(req)
+            return
         payload, length = self.kv.evict_slot_to_payload(req.slot)
         self._preempted_payloads[req.request_id] = [payload, length]
         bid = f"preempt-{req.request_id}"
@@ -397,7 +563,11 @@ class ServingEngine:
                "cache": self.manager.metrics(),
                "steps": self.steps,
                "idle_transfer_waits": self.idle_transfer_waits,
-               "paged": self.paged}
+               "paged": self.paged,
+               "chunked": self.chunked,
+               "prefill_chunks": self.prefill_chunks,
+               "prefill_tokens": self.prefill_tokens_total,
+               "max_step_prefill_tokens": self.max_step_prefill_tokens}
         if self.paged:
             out["allocator"] = self.kv.allocator.stats_dict()
         if self.worker is not None:

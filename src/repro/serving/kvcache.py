@@ -29,7 +29,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -84,6 +83,15 @@ class _KVCacheBase:
         n = payload.shape[2]
         self.write_range(slot, self._payload_state(payload), start, n)
         return n
+
+    def write_chunk(self, slot: int, state1: Dict, offset: int,
+                    n_tokens: int) -> None:
+        """Incremental chunked-prefill write: scatter the first
+        ``n_tokens`` of a prefill chunk's KV at token ``offset`` and
+        advance the slot's valid length (pad positions past the valid
+        suffix are never written)."""
+        self.write_range(slot, state1, offset, n_tokens)
+        self.set_length(slot, offset + n_tokens)
 
     # -- preemption ---------------------------------------------------------
     def evict_slot_to_payload(self, slot: int) -> Tuple[np.ndarray, int]:
@@ -362,19 +370,41 @@ class PagedKVCache(_KVCacheBase):
     # ------------------------------------------------------------------
     # decode-step interface
     # ------------------------------------------------------------------
-    def decode_state(self) -> Dict:
-        """Snapshot for Model.decode_step_paged.  Guarantees every active
-        slot has a private page mapped for the incoming token."""
+    def decode_state(self, decode_slots: Optional[Sequence[int]] = None
+                     ) -> Dict:
+        """Snapshot for Model.decode_step_paged.  Guarantees every
+        decoding slot has a private page mapped for the incoming token.
+
+        ``decode_slots`` restricts the batch to those slots (the mixed
+        token-budget step: slots mid-chunked-prefill stay out): excluded
+        rows get a zeroed block table and length 0, so the kernel's
+        per-row KV write lands on the reserved scratch page instead of
+        the slot's real (possibly CoW-shared) prefix pages."""
+        include = (None if decode_slots is None else set(decode_slots))
+        tables = self.tables
         for i, s in enumerate(self.slots):
-            if not s.active:
+            if not s.active or (include is not None and i not in include):
                 continue
             self._ensure_pages(i, s.length + 1)
             self.ensure_private(i, s.length // self.page)
-        lengths = np.asarray([s.length if s.active else 0
-                              for s in self.slots], np.int32)
+        lengths = np.asarray(
+            [s.length if s.active and (include is None or i in include)
+             else 0 for i, s in enumerate(self.slots)], np.int32)
+        if include is not None:
+            tables = tables.copy()
+            for i in range(self.n_slots):
+                if i not in include:
+                    tables[i, :] = 0
         state = dict(self.pools)
-        state["block_tables"] = jnp.asarray(self.tables)
+        state["block_tables"] = jnp.asarray(tables)
         state["lengths"] = jnp.asarray(lengths)
+        return state
+
+    def chunk_state(self, slot: int) -> Dict:
+        """Snapshot for Model.prefill_chunk: the page pools plus this
+        slot's block-table row (batch dim 1)."""
+        state = dict(self.pools)
+        state["block_table"] = jnp.asarray(self.tables[slot:slot + 1])
         return state
 
     def absorb(self, new_state: Dict) -> None:

@@ -5,7 +5,7 @@ import itertools
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 _ids = itertools.count()
 
@@ -40,10 +40,15 @@ class Request:
 
     # runtime state
     phase: Phase = Phase.WAITING
+    phase_start: float = field(default_factory=time.monotonic)
     generated: List[int] = field(default_factory=list)
     slot: int = -1                     # decode batch slot
     block_ids: List[str] = field(default_factory=list)
     prefix_hit_blocks: int = 0         # radix-matched blocks (skipped prefill)
+    # chunked prefill: tokens to prefill (prompt [+ generated] minus the
+    # final token) and the per-request chunk cursor into them
+    prefill_tokens: Optional[List[int]] = None
+    prefill_pos: int = 0
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 
@@ -54,6 +59,13 @@ class Request:
     @property
     def total_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def prefill_left(self) -> int:
+        """Prompt tokens still to prefill (0 outside the chunked path)."""
+        if self.prefill_tokens is None:
+            return 0
+        return max(0, len(self.prefill_tokens) - self.prefill_pos)
 
     @property
     def ttft(self) -> Optional[float]:

@@ -1,22 +1,32 @@
-"""Continuous-batching scheduler with sizing-engine admission, preemption
-and straggler mitigation.
+"""Continuous-batching scheduler with sizing-engine admission, a
+per-step token budget (Sarathi-style mixed batches), preemption and
+straggler mitigation.
 
 Admission control uses the paper's architecture-aware sizing engine
 (§III-A): the decode slot count is B_s* = floor(M_target / (L * B(n_max)))
 — an MLA model gets ~7x the slots of its MHA-equivalent sizing on the
 same budget, which is where the paper's throughput claim comes from.
 
-Straggler mitigation: requests that exceed ``deadline_s`` in a phase are
-preempted (KV demoted to lower tiers) and re-queued at the head; the
-cluster-level dispatcher (launch/serve.py) additionally re-dispatches to
-a backup replica.
+Each step's work is budget-selected (``plan_step``): every running
+decode stream contributes one token, then prefill chunks from
+``Phase.PREFILL`` requests (per-request chunk cursors) fill whatever is
+left of ``max_step_tokens`` in admission order — decode is never
+starved by a long prompt, and no step prefills more prompt tokens than
+the budget allows.
+
+Straggler mitigation: requests that exceed ``deadline_s`` *in their
+current phase* are preempted (KV demoted to lower tiers) and re-queued
+at the head; ``phase_start`` resets on every (re)admission, so a
+preempted-then-readmitted request gets a fresh deadline instead of
+instantly re-tripping it.  The cluster-level dispatcher
+(launch/serve.py) additionally re-dispatches to a backup replica.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.config import ModelConfig
 from repro.core import sizing
@@ -30,6 +40,7 @@ class SchedulerConfig:
     max_slots: int = 64
     deadline_s: float = 60.0
     status_quo_sizing: bool = False         # ablation: MHA-equivalent
+    max_step_tokens: int = 256              # per-step token budget
 
 
 class Scheduler:
@@ -54,6 +65,7 @@ class Scheduler:
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.phase = Phase.WAITING
+        req.phase_start = time.monotonic()
         self.waiting.append(req)
 
     def admissible(self, free_slots: int) -> List[Request]:
@@ -67,8 +79,51 @@ class Scheduler:
 
     def start(self, req: Request, slot: int) -> None:
         req.phase = Phase.DECODE
+        req.phase_start = time.monotonic()
         req.slot = slot
         self.running[req.request_id] = req
+
+    def start_prefill(self, req: Request, slot: int) -> None:
+        """Admit into the chunked-prefill phase: the request holds a
+        slot and consumes budget via ``plan_step`` until its chunk
+        cursor reaches the prompt end."""
+        req.phase = Phase.PREFILL
+        req.phase_start = time.monotonic()
+        req.slot = slot
+        self.running[req.request_id] = req
+
+    def begin_decode(self, req: Request) -> None:
+        """PREFILL -> DECODE transition (cursor reached the prompt end)."""
+        req.phase = Phase.DECODE
+        req.phase_start = time.monotonic()
+
+    # ------------------------------------------------------------------
+    # token-budget step planning (the mixed batch)
+    # ------------------------------------------------------------------
+    def plan_step(self) -> Tuple[List[Request], List[Tuple[Request, int]]]:
+        """Select this step's work: (decode requests, prefill grants).
+
+        Every ``Phase.DECODE`` request decodes one token — decode is
+        never starved.  The remaining budget is granted to
+        ``Phase.PREFILL`` requests in admission order as
+        ``(request, n_tokens)`` pairs (the engine splits a grant into
+        fixed-size kernel chunks).  Total per-step prompt tokens never
+        exceed ``max_step_tokens``.
+        """
+        decode = [r for r in self.running.values()
+                  if r.phase is Phase.DECODE]
+        budget = self.sched.max_step_tokens - len(decode)
+        grants: List[Tuple[Request, int]] = []
+        for r in self.running.values():
+            if r.phase is not Phase.PREFILL:
+                continue
+            if budget <= 0:
+                break
+            n = min(r.prefill_left, budget)
+            if n > 0:
+                grants.append((r, n))
+                budget -= n
+        return decode, grants
 
     def finish(self, req: Request) -> None:
         req.phase = Phase.DONE
@@ -78,6 +133,7 @@ class Scheduler:
 
     def preempt(self, req: Request) -> None:
         req.phase = Phase.PREEMPTED
+        req.phase_start = time.monotonic()
         self.running.pop(req.request_id, None)
         self.preempted.appendleft(req)
 
@@ -109,11 +165,14 @@ class Scheduler:
         return req
 
     def check_stragglers(self, now: Optional[float] = None) -> List[Request]:
-        """Requests over their deadline -> candidates for preempt +
-        re-dispatch."""
+        """Requests over their deadline *in the current phase* ->
+        candidates for preempt + re-dispatch.  Measured from
+        ``phase_start`` (reset on every (re)admission), not ``arrival``
+        — otherwise a preempted-then-readmitted request instantly
+        exceeds the deadline again and livelocks."""
         now = time.monotonic() if now is None else now
         out = [r for r in self.running.values()
-               if now - r.arrival > self.sched.deadline_s]
+               if now - r.phase_start > self.sched.deadline_s]
         self.stragglers += len(out)
         return out
 

@@ -118,3 +118,102 @@ def test_int8_paged_decode_vs_oracle_and_fp():
                                rtol=1e-5, atol=1e-5)
     exp_fp = ref.paged_decode_attention_ref(q, k, v, bt, ln)
     assert float(jnp.max(jnp.abs(out - exp_fp))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill over paged KV (kernels/paged_prefill.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,hq,hkv,hd,page,pages,offs", [
+    (2, 16, 4, 2, 32, 8, 5, (19, 0)),     # unaligned + zero offset
+    (1, 32, 8, 8, 64, 32, 3, (64,)),      # MHA, page-aligned offset
+    (2, 8, 4, 1, 16, 16, 4, (5, 48)),     # MQA
+])
+def test_paged_prefill_sweep(b, c, hq, hkv, hd, page, pages, offs, dtype):
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    n = b * pages + 2
+    q = _arr((b, c, hq, hd), dtype)
+    kc = _arr((b, c, hkv, hd), dtype)
+    vc = _arr((b, c, hkv, hd), dtype)
+    kp = _arr((n, page, hkv, hd), dtype)
+    vp = _arr((n, page, hkv, hd), dtype)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    off = jnp.asarray(offs, jnp.int32)
+    out = paged_prefill_attention(q, kc, vc, kp, vp, bt, off,
+                                  interpret=True)
+    exp = ref.paged_prefill_attention_ref(q, kc, vc, kp, vp, bt, off)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,c,hq,dl,dr,page,pages,offs", [
+    (2, 16, 4, 32, 8, 16, 4, (23, 0)),
+    (1, 8, 8, 64, 16, 32, 2, (32,)),
+])
+def test_mla_paged_prefill_sweep(b, c, hq, dl, dr, page, pages, offs):
+    from repro.kernels.paged_prefill import mla_paged_prefill
+    n = b * pages + 1
+    ql = _arr((b, c, hq, dl), jnp.float32)
+    qr = _arr((b, c, hq, dr), jnp.float32)
+    lc = _arr((b, c, dl + dr), jnp.float32)
+    lp = _arr((n, page, dl + dr), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    off = jnp.asarray(offs, jnp.int32)
+    out = mla_paged_prefill(ql, qr, lc, lp, bt, off, d_latent=dl,
+                            interpret=True)
+    exp = ref.mla_paged_prefill_ref(ql, qr, lc, lp, bt, off, dl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_prefill_ignores_pool_garbage_past_offset():
+    """Tokens at pool positions >= offset (stale pages, the page the
+    chunk will land on) must never contribute to chunk attention."""
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    b, c, hq, hkv, hd, page, pages = 1, 8, 4, 2, 32, 8, 4
+    n = pages + 1
+    q = _arr((b, c, hq, hd), jnp.float32)
+    kc = _arr((b, c, hkv, hd), jnp.float32)
+    vc = _arr((b, c, hkv, hd), jnp.float32)
+    kp = _arr((n, page, hkv, hd), jnp.float32)
+    vp = _arr((n, page, hkv, hd), jnp.float32)
+    bt = jnp.arange(1, n, dtype=jnp.int32).reshape(1, pages)
+    off = jnp.asarray([11], jnp.int32)    # mid-page offset
+    out = paged_prefill_attention(q, kc, vc, kp, vp, bt, off,
+                                  interpret=True)
+    # poison everything at and past the offset
+    mask = (jnp.arange(page)[None, :, None, None] +
+            page * jnp.arange(n)[:, None, None, None] - page) >= 11
+    out2 = paged_prefill_attention(q, kc, vc,
+                                   jnp.where(mask, 999.0, kp),
+                                   jnp.where(mask, 999.0, vp),
+                                   bt, off, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_prefill_chunk_is_causal():
+    """Future chunk tokens must not influence earlier chunk queries."""
+    from repro.kernels.paged_prefill import paged_prefill_attention
+    b, c, hq, hkv, hd, page, pages = 1, 8, 4, 2, 32, 8, 2
+    n = pages + 1
+    q = _arr((b, c, hq, hd), jnp.float32)
+    kc = _arr((b, c, hkv, hd), jnp.float32)
+    vc = _arr((b, c, hkv, hd), jnp.float32)
+    kp = _arr((n, page, hkv, hd), jnp.float32)
+    vp = _arr((n, page, hkv, hd), jnp.float32)
+    bt = jnp.arange(1, n, dtype=jnp.int32).reshape(1, pages)
+    off = jnp.asarray([16], jnp.int32)
+    out = paged_prefill_attention(q, kc, vc, kp, vp, bt, off,
+                                  interpret=True)
+    kc2 = kc.at[:, 5:].set(999.0)
+    vc2 = vc.at[:, 5:].set(999.0)
+    out2 = paged_prefill_attention(q, kc2, vc2, kp, vp, bt, off,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :5]),
+                               np.asarray(out2[:, :5]),
+                               rtol=1e-5, atol=1e-5)
