@@ -78,6 +78,10 @@ class ModelConfig:
     internal_pad_experts: int = 0     # pad expert count to divide TP for
                                       # expert parallelism; padded experts
                                       # get -inf router logits
+    # --- cache-block granularity override ---------------------------------
+    kv_block_tokens: int = 0          # 0 -> variant default (sizing.block_tokens);
+                                      # reduced replay configs shrink it so the
+                                      # live engine sees trace-scale blocks
 
     # ------------------------------------------------------------------
     @property

@@ -52,18 +52,30 @@ class AccessResult:
 class ManagerStats:
     accesses: int = 0
     hot_hits: int = 0            # tier 0+1 (paper Table V definition)
+    hot_hits_t0: int = 0         # ... served straight from the tier-0 pool
+    hot_hits_t1: int = 0         # ... resident in tier 1 (DRAM payload copy)
     tier_hits: Dict[int, int] = field(default_factory=dict)
     cold_misses: int = 0
     promotions: int = 0
     demotions: int = 0
     prefetch_issued: int = 0
     dedup_hits: int = 0
+    reregistrations: int = 0     # known content re-registered after a drop
+    #                              (a cold miss the radix path cannot see)
     fetch_time: float = 0.0
     recompute_time: float = 0.0
 
     @property
     def hit_rate(self) -> float:
         return self.hot_hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def replay_hit_rate(self) -> float:
+        """Table-V hit rate with dropped-then-reregistered blocks counted
+        as cold misses (the live engine never issues a lookup for them —
+        the radix prefix is gone — so plain ``hit_rate`` overstates)."""
+        denom = self.accesses + self.reregistrations
+        return self.hot_hits / denom if denom else 0.0
 
 
 class PredictiveCacheManager:
@@ -141,6 +153,10 @@ class PredictiveCacheManager:
                 if dup and canonical in self.metas:
                     self.stats.dedup_hits += 1
                     return canonical, True
+                if dup:
+                    # content seen before but its block was evicted from
+                    # every tier: the caller recomputes — a cold miss
+                    self.stats.reregistrations += 1
                 bid = canonical
             else:
                 bid = self._new_block_id()
@@ -159,15 +175,22 @@ class PredictiveCacheManager:
 
     def register_sequence(self, tokens: Sequence[int], *,
                           block_type: str = "user_context",
+                          block_types: Optional[Sequence[str]] = None,
                           recompute_cost_per_block: float = 0.05) -> List[str]:
         """Split a token sequence into blocks, dedup each, register the
-        prefix in the radix tree, return the block ids."""
+        prefix in the radix tree, return the block ids.  ``block_types``
+        optionally gives a per-block semantic type (index = block number;
+        a multi-turn prompt mixes system/context/input blocks, and the
+        Bayesian posteriors are keyed on the type)."""
         bt = self.block_tokens
         ids: List[str] = []
         n = (len(tokens) // bt) * bt
         for i in range(0, n, bt):
+            btype = block_type
+            if block_types is not None and i // bt < len(block_types):
+                btype = block_types[i // bt]
             bid, _ = self.register_block(
-                tokens[i:i + bt], block_type=block_type,
+                tokens[i:i + bt], block_type=btype,
                 recompute_cost=recompute_cost_per_block,
                 positions=(i, i + bt))
             ids.append(bid)
@@ -302,6 +325,10 @@ class PredictiveCacheManager:
                 self._promote(block_id, loc, 0)
             else:
                 self.stats.hot_hits += 1
+                if loc == 0:
+                    self.stats.hot_hits_t0 += 1
+                else:
+                    self.stats.hot_hits_t1 += 1
                 self.stats.tier_hits[loc] = self.stats.tier_hits.get(loc, 0) + 1
             return AccessResult(block_id, hit, loc, fetch_time, recomputed)
 
@@ -379,10 +406,18 @@ class PredictiveCacheManager:
         return ttype
 
     # ------------------------------------------------------------------
-    def release_sequence(self, block_ids: Sequence[str]) -> None:
+    def release_sequence(self, block_ids: Sequence[str], *,
+                         retain: bool = False) -> None:
         """Drop refcounts when a request completes; free blocks that hit 0
         AND have low predicted reuse (others linger for cross-request
-        reuse — that is the whole point of the paper)."""
+        reuse — that is the whole point of the paper).
+
+        ``retain=True`` (session continuation: the next turn resubmits
+        this prefix) balances the request's dedup reference without ever
+        dropping the last one, so the blocks stay registered and
+        matchable.  The first retained release of a block leaves one
+        standing reference for the session chain; tier eviction ignores
+        refcounts, so residency stays capacity-bounded either way."""
         for bid in block_ids:
             meta = self.metas.get(bid)
             if meta is None:
@@ -390,9 +425,15 @@ class PredictiveCacheManager:
             if self.store is not None:
                 h = getattr(meta, "content_hash", None)
                 if h is not None:
+                    if retain:
+                        if self.store.refcount(bid) > 1:
+                            self.store.release(h)
+                        continue
                     freed = self.store.release(h)
                     if freed is None:
                         continue     # other references remain
+            if retain:
+                continue
             if meta.reuse_prob < 0.2:
                 loc = self.hierarchy.locate(bid)
                 if loc is not None:
@@ -411,7 +452,11 @@ class PredictiveCacheManager:
         """Prometheus-style metrics (paper §IV Observability)."""
         return {
             "hit_rate_hot": self.stats.hit_rate,
+            "hit_rate_replay": self.stats.replay_hit_rate,
             "accesses": self.stats.accesses,
+            "hot_hits_t0": self.stats.hot_hits_t0,
+            "hot_hits_t1": self.stats.hot_hits_t1,
+            "reregistrations": self.stats.reregistrations,
             "promotions": self.stats.promotions,
             "demotions": self.stats.demotions,
             "cold_misses": self.stats.cold_misses,

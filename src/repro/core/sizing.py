@@ -135,7 +135,11 @@ def decode_state_bytes(cfg: ModelConfig, n: int, batch: int = 1) -> float:
 # ---------------------------------------------------------------------------
 def block_tokens(cfg: ModelConfig) -> int:
     """PagedAttention block size per variant (paper: 512 MLA / 128 GQA-MQA /
-    64 MHA) — chosen so a block is a few hundred KB in every variant."""
+    64 MHA) — chosen so a block is a few hundred KB in every variant.
+    ``cfg.kv_block_tokens`` overrides the variant default (trace replay
+    shrinks blocks so reduced models see trace-scale reuse granularity)."""
+    if cfg.kv_block_tokens > 0:
+        return cfg.kv_block_tokens
     v = cfg.attention_variant
     if v == MLA:
         return 512

@@ -80,6 +80,10 @@ class EngineConfig:
     #                                   (False: monolithic prefill A/B)
     prefill_chunk_tokens: int = 64    # kernel chunk size (jit cache)
     max_step_tokens: int = 256        # per-step token budget
+    tier0_from_budget: bool = True    # rescale tier-0 capacity to
+    #                                   kv_budget_bytes (False: trace replay
+    #                                   keeps the pressure capacities of the
+    #                                   supplied tier_specs verbatim)
 
 
 class ServingEngine:
@@ -119,11 +123,13 @@ class ServingEngine:
             self._decode = jax.jit(self.model.decode_step,
                                    donate_argnums=(1,))
         # scale tier-0 capacity to the configured budget so eviction and
-        # tier demotion actually engage at live-test scale
+        # tier demotion actually engage at live-test scale (replay passes
+        # tier0_from_budget=False to keep its pressure capacities)
         specs = list(engine_cfg.tier_specs)
-        specs[0] = TierSpec(0, specs[0].name, specs[0].bandwidth,
-                            specs[0].latency, specs[0].cost_per_gb_hour,
-                            engine_cfg.kv_budget_bytes)
+        if engine_cfg.tier0_from_budget:
+            specs[0] = TierSpec(0, specs[0].name, specs[0].bandwidth,
+                                specs[0].latency, specs[0].cost_per_gb_hour,
+                                engine_cfg.kv_budget_bytes)
         self.manager = PredictiveCacheManager(
             cfg, specs=tuple(specs), policy=engine_cfg.policy,
             enable_dedup=engine_cfg.enable_dedup,
@@ -157,17 +163,21 @@ class ServingEngine:
         #                                restores in flight (no decode work)
         self.prefill_chunks = 0        # kernel chunk calls
         self.prefill_tokens_total = 0  # prompt tokens through the chunk path
+        self.cow_share_hits = 0        # prefix blocks served by CoW page map
+        self.inject_hits = 0           # ... by tier payload injection
         self.last_step_prefill_tokens = 0
         self.max_step_prefill_tokens = 0   # budget-compliance witness
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], *, params: SamplingParams = None,
                session_id: str = None, block_type: str = "user_context",
-               tool: str = None) -> Request:
+               tool: str = None, retain_blocks: bool = False,
+               block_types: Sequence[str] = None) -> Request:
         req = Request(prompt=list(prompt),
                       params=params or SamplingParams(),
                       session_id=session_id, block_type=block_type,
-                      tool=tool)
+                      tool=tool, retain_blocks=retain_blocks,
+                      block_types=list(block_types) if block_types else None)
         if self.chunked:
             # chunked prefill writes only valid tokens (no pad rounding)
             need = req.prompt_len + req.params.max_new_tokens + 1
@@ -226,14 +236,18 @@ class ServingEngine:
             res = mgr.access(bid, transition=transition)
             if res.recomputed:
                 break                      # payload lost -> recompute rest
+            if res.hit:
+                req.hot_hit_blocks += 1
             if self.paged and self.kv.can_share(bid):
                 # pool-resident block: CoW-map its physical pages
                 self.kv.share_block(slot, bid, prefix_len)
+                self.cow_share_hits += 1
             else:
                 pl = mgr._payloads.get(bid)
                 if pl is None:
                     break
                 self.kv.inject_block(slot, pl, prefix_len)
+                self.inject_hits += 1
             prefix_len += bt
             n_hit += 1
         req.prefix_hit_blocks = n_hit
@@ -285,6 +299,7 @@ class ServingEngine:
         n_full = (len(effective) // bt) * bt
         new_ids = mgr.register_sequence(
             list(effective[:n_full]), block_type=req.block_type,
+            block_types=req.block_types,
             recompute_cost_per_block=self._block_recompute_cost())
         for i, bid in enumerate(new_ids):
             if bid not in mgr._payloads:
@@ -326,13 +341,17 @@ class ServingEngine:
             res = mgr.access(bid, transition=transition)
             if res.recomputed:
                 break                  # payload lost -> compute the rest
+            if res.hit:
+                req.hot_hit_blocks += 1
             if self.kv.can_share(bid):
                 self.kv.share_block(req.slot, bid, i * bt)
+                self.cow_share_hits += 1
             else:
                 pl = mgr._payloads.get(bid)
                 if pl is None:
                     break
                 self.kv.inject_block(req.slot, pl, i * bt)
+                self.inject_hits += 1
             req.prefill_pos += bt
             req.prefix_hit_blocks += 1
             advanced += bt
@@ -508,7 +527,11 @@ class ServingEngine:
             for slot, req in by_slot.items():
                 if (req.finished()
                         or req.total_len >= self.ecfg.max_len - 1):
-                    self.manager.release_sequence(req.block_ids)
+                    # retain_blocks (session continuation) balances the
+                    # dedup refcount but keeps the blocks registered for
+                    # the next turn's prefix match
+                    self.manager.release_sequence(
+                        req.block_ids, retain=req.retain_blocks)
                     sch.finish(req)
                     self.kv.release(req.slot)
         if self.paged:
@@ -567,7 +590,9 @@ class ServingEngine:
                "chunked": self.chunked,
                "prefill_chunks": self.prefill_chunks,
                "prefill_tokens": self.prefill_tokens_total,
-               "max_step_prefill_tokens": self.max_step_prefill_tokens}
+               "max_step_prefill_tokens": self.max_step_prefill_tokens,
+               "cow_share_hits": self.cow_share_hits,
+               "inject_hits": self.inject_hits}
         if self.paged:
             out["allocator"] = self.kv.allocator.stats_dict()
         if self.worker is not None:

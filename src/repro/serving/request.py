@@ -34,7 +34,13 @@ class Request:
     params: SamplingParams = field(default_factory=SamplingParams)
     session_id: Optional[str] = None
     block_type: str = "user_context"   # semantic role of the prompt blocks
+    block_types: Optional[List[str]] = None   # per-block roles (index =
+    #                                    prompt block number; overrides
+    #                                    block_type where present)
     tool: Optional[str] = None         # agentic workloads: invoked tool
+    retain_blocks: bool = False        # keep prompt blocks registered after
+    #                                    finish (session continuation: the
+    #                                    next turn resubmits this prefix)
     request_id: int = field(default_factory=lambda: next(_ids))
     arrival: float = field(default_factory=time.monotonic)
 
@@ -45,6 +51,8 @@ class Request:
     slot: int = -1                     # decode batch slot
     block_ids: List[str] = field(default_factory=list)
     prefix_hit_blocks: int = 0         # radix-matched blocks (skipped prefill)
+    hot_hit_blocks: int = 0            # ... of those, resident in tiers 0-1
+    #                                    at access time (paper Table V hit)
     # chunked prefill: tokens to prefill (prompt [+ generated] minus the
     # final token) and the per-request chunk cursor into them
     prefill_tokens: Optional[List[int]] = None

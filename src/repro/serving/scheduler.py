@@ -180,6 +180,21 @@ class Scheduler:
         return bool(self.waiting or self.running or self.preempted
                     or self.blocked)
 
+    def session_stats(self) -> Dict[str, dict]:
+        """Per-session rollup over finished requests (the trace replay's
+        multi-turn sessions map one request per turn)."""
+        out: Dict[str, dict] = {}
+        for r in self.done:
+            sid = r.session_id or f"req{r.request_id}"
+            s = out.setdefault(sid, {"turns": 0, "prefix_hit_blocks": 0,
+                                     "generated_tokens": 0,
+                                     "prompt_tokens": 0})
+            s["turns"] += 1
+            s["prefix_hit_blocks"] += r.prefix_hit_blocks
+            s["generated_tokens"] += len(r.generated)
+            s["prompt_tokens"] += r.prompt_len
+        return out
+
     def stats(self) -> dict:
         ttfts = sorted(r.ttft for r in self.done if r.ttft is not None)
 
@@ -196,4 +211,5 @@ class Scheduler:
                 "transfer_events": self.transfer_events,
                 "async_restores": self.async_restores,
                 "prefix_hit_blocks": sum(r.prefix_hit_blocks
-                                         for r in self.done)}
+                                         for r in self.done),
+                "hot_hit_blocks": sum(r.hot_hit_blocks for r in self.done)}

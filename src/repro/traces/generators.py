@@ -194,6 +194,29 @@ def _make(gen_session, cfg: TraceConfig, salt: int) -> List[BlockAccess]:
     return _interleave_turns(sessions, cfg)
 
 
+SESSION_GENERATORS = {"sharegpt": (_sharegpt_session, 0),
+                      "lmsys": (_lmsys_session, 1),
+                      "agentic": (_agentic_session, 2)}
+
+
+def workload_sessions(workload: str, cfg: TraceConfig) -> List[List[Turn]]:
+    """Session-level view of a workload: each session is a list of turns,
+    each turn a list of ``BlockAccess`` events in submission order.
+
+    The block-level traces (``sharegpt_trace`` & co.) interleave these
+    same sessions turn-by-turn; the serving replay adapter
+    (``traces/serving_replay.py``) instead drives each session's turns
+    through the live ``ServingEngine`` as multi-turn requests.  Salts
+    match ``_make``, so session content is identical to the flat trace
+    under the same ``TraceConfig``.
+    """
+    gen, salt = SESSION_GENERATORS[workload]
+    if workload == "agentic":
+        _TOOL_CTX_CACHE.clear()
+    rng = np.random.default_rng(cfg.seed + salt)
+    return [gen(rng, s) for s in range(cfg.n_sessions)]
+
+
 def sharegpt_trace(cfg: TraceConfig) -> List[BlockAccess]:
     return _make(_sharegpt_session, cfg, 0)
 

@@ -1,0 +1,386 @@
+"""Trace→engine serving replay: the paper's §V-E evaluation driven
+through the real ``ServingEngine`` instead of the standalone cache
+manager.
+
+``traces/replay.py`` replays block-access traces against the
+``PredictiveCacheManager`` alone — scheduling, paged-pool CoW sharing,
+chunked prefill and tier-transfer latency never enter the picture.  This
+adapter closes that gap: it converts the same ShareGPT / LMSYS / agentic
+session generators (``traces/generators.py``) into **timed multi-turn
+request streams** and drives them open-loop against a live engine under
+a virtual clock:
+
+  * each turn submits the **full conversation prefix** (system prompt +
+    input history + new input), so cross-turn and cross-session reuse
+    flows through the real radix-match → CoW-page-share / tier-payload
+    injection path instead of a metadata lookup;
+  * one trace block maps to exactly one engine KV block
+    (``ModelConfig.kv_block_tokens`` shrinks the engine block so reduced
+    models see trace-scale reuse granularity), keeping the engine's
+    hit accounting block-for-block comparable with Table V;
+  * sessions arrive open-loop at a fixed virtual interarrival; within a
+    session the next turn submits after the previous turn's completion
+    plus a think-time gap (closed-loop per conversation, like a real
+    chat client);
+  * the virtual clock advances per engine step by a modelled step time:
+    a fixed overhead, a per-token compute cost, and the manager's
+    modelled tier-fetch / recompute stall for that step — so hit-rate
+    differences between policies surface in TTFT/TBT, which is exactly
+    the serving-layer interaction KVDrive (arXiv 2605.18071) argues
+    block-level replay cannot capture.
+
+Tier capacities reuse ``traces/replay.py::replay_tier_specs`` (scaled-
+down tiers 0/1 so the reusable working set exceeds the hot set) with
+``EngineConfig(tier0_from_budget=False)`` so the pressure capacities
+stand.
+
+Hit-rate definition (Table V analogue, measured at the engine):
+``engine_hit_rate = hot-hit prompt blocks / previously-seen prompt
+blocks``.  The denominator is trace ground truth — a prompt block whose
+content appeared in an earlier-submitted turn (first touch excluded,
+exactly like ``replay.py``).  The numerator is the engine's own
+accounting (``Request.hot_hit_blocks``): blocks actually served from
+tiers 0-1.  Content that is resident but unreachable because the radix
+prefix diverged (e.g. history truncation) therefore counts as a miss —
+at the serving layer that compute is really paid, which is the point of
+evaluating end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig, reduce_config
+from repro.core import sizing
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Phase, Request, SamplingParams
+from repro.traces.generators import TraceConfig, Turn, workload_sessions
+from repro.traces.replay import replay_tier_specs
+
+
+def replay_model_config(block_tokens: int = 32) -> ModelConfig:
+    """Reduced llama3.2-1b with trace-scale KV blocks: one trace block
+    (nominally 128 tokens) maps to one ``block_tokens``-token engine
+    block, so a full multi-turn prompt stays CPU-sized while the reuse
+    structure is preserved block-for-block."""
+    from repro.configs import get_config
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    return dataclasses.replace(cfg, name=cfg.name + "-replay",
+                               kv_block_tokens=block_tokens)
+
+
+# Per-workload tier-0/tier-1 pressure (block counts) for the live-engine
+# replay: chosen so the reusable working set (sharegpt 244 / lmsys 110 /
+# agentic 168 distinct blocks at 12 sessions, plus the turns' single-use
+# output blocks) exceeds the hot set and the eviction policy has
+# decisions to make — cf. REPLAY_HOT_BLOCKS for the block-level replay.
+ENGINE_REPLAY_BLOCKS: Dict[str, Tuple[int, int]] = {
+    "sharegpt": (48, 72),
+    "lmsys": (32, 48),
+    "agentic": (64, 96),
+}
+
+
+@dataclass
+class ServingReplayConfig:
+    workload: str = "agentic"
+    policy: str = "bayesian"            # lru | ema | bayesian
+    n_sessions: int = 12
+    seed: int = 0
+    max_turns: int = 6                  # cap turns per session (CPU budget)
+    max_new_cap: int = 4                # cap decode tokens per turn
+    block_tokens: int = 32              # engine tokens per trace block
+    page_tokens: int = 32
+    prefill_chunk_tokens: int = 64
+    max_step_tokens: int = 160
+    n_slots: int = 8                    # target decode concurrency
+    hot_blocks: Optional[int] = None    # tier-0 capacity (None: per-workload)
+    t1_blocks: Optional[int] = None     # tier-1 capacity (None: per-workload)
+    async_transfers: bool = True        # real async worker path; False runs
+    #                                     transfers inline — bit-for-bit
+    #                                     deterministic (thread completion
+    #                                     timing is polled per step, so a
+    #                                     prefetch promotion may land a step
+    #                                     earlier or later between runs)
+    # --- virtual clock model ---------------------------------------------
+    session_interarrival_s: float = 0.005
+    think_time_s: float = 0.02
+    step_overhead_s: float = 1.5e-3
+    per_token_s: float = 4e-5
+    stall_weight: float = 1.0           # modelled fetch/recompute stall
+    fetch_stall_s: float = 1e-3         # per lower-tier promotion: at paper
+    #                                     scale a block is MBs (not the
+    #                                     reduced model's KBs), so a CXL/
+    #                                     NVMe fetch costs ~1 ms — the
+    #                                     reduced transfer_time under-
+    #                                     states it by the size ratio
+    max_steps: int = 50_000
+
+
+@dataclass
+class ServingReplayResult:
+    workload: str
+    policy: str
+    engine_hit_rate: float         # hot (tier 0-1) hits / seen blocks
+    reuse_rate: float              # any-tier cache-served / seen blocks
+    seen_blocks: int
+    manager_hit_rate: float        # PredictiveCacheManager hot-hit rate
+    manager_replay_hit_rate: float
+    hot_hits_t0: int               # pool (CoW-shareable) hits
+    hot_hits_t1: int               # DRAM-resident hits
+    cow_share_hits: int            # engine: blocks served by CoW page map
+    inject_hits: int               # engine: blocks served by payload inject
+    promotions: int
+    demotions: int
+    requests_done: int
+    sessions: int
+    generated_tokens: int
+    ttft_p50: float                # virtual seconds
+    ttft_p95: float
+    tbt_p50: float
+    tbt_p95: float
+    throughput_tok_s: float        # generated tokens / virtual time
+    virtual_time_s: float
+    steps: int
+    wall_s: float
+
+
+@dataclass
+class _TurnSpec:
+    session_id: str
+    prompt: List[int]
+    block_types: List[str]
+    acct_cids: List[Tuple]         # accountable content ids (full blocks)
+    tool: Optional[str]
+    max_new: int
+
+
+@dataclass
+class _Tracked:
+    req: Request
+    session: int
+    submit_v: float
+    seen_blocks: int
+    token_times: List[float] = field(default_factory=list)
+    done_v: Optional[float] = None
+
+
+def _materialize(cid: Tuple, bt: int, vocab: int,
+                 cache: Dict[Tuple, List[int]]) -> List[int]:
+    """Content id -> a deterministic block of ``bt`` tokens.  Identical
+    ids yield identical tokens, so the engine's content-hash dedup and
+    radix prefix matching see the trace's sharing structure."""
+    toks = cache.get(cid)
+    if toks is None:
+        rng = np.random.default_rng(cid[0])
+        toks = [int(t) for t in rng.integers(0, vocab, size=bt)]
+        cache[cid] = toks
+    return toks
+
+
+def _turn_spec(turn: Turn, bt: int, vocab: int, max_new_cap: int,
+               cache: Dict[Tuple, List[int]]) -> _TurnSpec:
+    """One trace turn -> a request spec.
+
+    The prompt is the turn's full conversation prefix (system + history
+    + input, in event order) **plus the turn's output blocks** at the
+    end: after a real turn, the model's reply occupies KV alongside the
+    prompt, and the trace marks those ``intermediate_reasoning`` blocks
+    single-use.  Materializing them prompt-side puts the same block
+    population in the live pool — single-use scratch that the eviction
+    policy must get out of the way of reusable context, which is the
+    paper's Problem 3 (recency != reuse; decoding the full reply
+    token-by-token on CPU would cost ~bt x more for identical cache
+    behaviour).  The next turn's prompt never repeats them, so the radix
+    prefix diverges exactly where the trace says it does.  Decode load
+    is a capped handful of sampled tokens per turn."""
+    prompt: List[int] = []
+    btypes: List[str] = []
+    cids: List[Tuple] = []
+    tool: Optional[str] = None
+    out_blocks = 0
+    for ev in turn:
+        if ev.tool is not None:
+            tool = ev.tool
+        if ev.block_type == "intermediate_reasoning":
+            out_blocks += 1
+        prompt.extend(_materialize(ev.content_id, bt, vocab, cache))
+        btypes.append(ev.block_type)
+        cids.append(ev.content_id)
+    # prefill covers prompt[:-1]: the final block stays one token short
+    # of full, so it is neither registered nor matchable — exclude it
+    # from the hit accounting (it can never be a hit or a miss)
+    return _TurnSpec(session_id=turn[0].session, prompt=prompt,
+                     block_types=btypes, acct_cids=cids[:-1], tool=tool,
+                     max_new=max(1, min(max_new_cap, out_blocks)))
+
+
+def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
+                 max_len: int = 768) -> ServingEngine:
+    cfg = replay_model_config(rcfg.block_tokens) if cfg is None else cfg
+    hot, t1 = ENGINE_REPLAY_BLOCKS.get(rcfg.workload, (64, 96))
+    hot = rcfg.hot_blocks if rcfg.hot_blocks is not None else hot
+    t1 = rcfg.t1_blocks if rcfg.t1_blocks is not None else t1
+    specs = replay_tier_specs(cfg, hot_blocks=hot, t1_blocks=t1)
+    ecfg = EngineConfig(
+        max_len=max_len,
+        kv_budget_bytes=rcfg.n_slots * sizing.seq_bytes(cfg, max_len),
+        policy=rcfg.policy,
+        deadline_s=1e9,                 # virtual time: no wall-clock
+        #                                 straggler preemption
+        seed=rcfg.seed,
+        tier_specs=specs,
+        tier0_from_budget=False,        # keep the replay pressure capacity
+        async_transfers=rcfg.async_transfers,
+        page_tokens=rcfg.page_tokens,
+        prefill_chunk_tokens=rcfg.prefill_chunk_tokens,
+        max_step_tokens=rcfg.max_step_tokens)
+    return ServingEngine(cfg, ecfg)
+
+
+def _percentile(vals: Sequence[float], p: float) -> float:
+    vals = sorted(vals)
+    if not vals:
+        return 0.0
+    return vals[min(len(vals) - 1, int(p * len(vals)))]
+
+
+def run_serving_replay(rcfg: ServingReplayConfig,
+                       turn_log: Optional[List[dict]] = None
+                       ) -> ServingReplayResult:
+    """Replay one workload x policy through the live engine.
+
+    ``turn_log`` (optional) receives one dict per submitted turn
+    (session, turn index, request id, virtual submit time) — the
+    determinism / ordering tests assert on it.
+    """
+    cfg = replay_model_config(rcfg.block_tokens)
+    bt = sizing.block_tokens(cfg)
+    sessions = workload_sessions(
+        rcfg.workload, TraceConfig(n_sessions=rcfg.n_sessions,
+                                   seed=rcfg.seed))
+    cache: Dict[Tuple, List[int]] = {}
+    specs: List[List[_TurnSpec]] = [
+        [_turn_spec(t, bt, cfg.vocab_size, rcfg.max_new_cap, cache)
+         for t in sess[:rcfg.max_turns]]
+        for sess in sessions]
+    max_prompt = max(len(t.prompt) for s in specs for t in s)
+    max_len = max_prompt + rcfg.max_new_cap + 2
+    max_len = -(-max_len // rcfg.page_tokens) * rcfg.page_tokens
+    eng = build_engine(rcfg, cfg, max_len=max_len)
+
+    n_sess = len(specs)
+    next_turn = [0] * n_sess
+    ready_v = [i * rcfg.session_interarrival_s for i in range(n_sess)]
+    in_flight: List[Optional[int]] = [None] * n_sess   # request_id
+    seen: set = set()
+    tracked: Dict[int, _Tracked] = {}
+    vt = 0.0
+    t_wall = time.time()
+    steps = 0
+
+    def pending(i: int) -> bool:
+        return next_turn[i] < len(specs[i])
+
+    while any(pending(i) for i in range(n_sess)) \
+            or eng.scheduler.has_work():
+        # open-loop submission: every session whose next turn is due
+        for i in range(n_sess):
+            if not pending(i) or in_flight[i] is not None \
+                    or ready_v[i] > vt:
+                continue
+            spec = specs[i][next_turn[i]]
+            n_seen = sum(1 for c in spec.acct_cids if c in seen)
+            seen.update(spec.acct_cids)
+            req = eng.submit(
+                spec.prompt,
+                params=SamplingParams(max_new_tokens=spec.max_new),
+                session_id=spec.session_id,
+                block_types=spec.block_types,
+                tool=spec.tool,
+                retain_blocks=next_turn[i] + 1 < len(specs[i]))
+            tracked[req.request_id] = _Tracked(
+                req=req, session=i, submit_v=vt, seen_blocks=n_seen)
+            in_flight[i] = req.request_id
+            if turn_log is not None:
+                turn_log.append({"session": spec.session_id,
+                                 "turn": next_turn[i],
+                                 "request_id": req.request_id,
+                                 "submit_v": vt,
+                                 "prompt_len": len(spec.prompt)})
+            next_turn[i] += 1
+        if eng.scheduler.has_work():
+            st = eng.manager.stats
+            f0, r0, p0 = st.fetch_time, st.recompute_time, st.promotions
+            produced = eng.step()
+            steps += 1
+            step_tokens = eng.last_step_prefill_tokens + produced
+            vt += (rcfg.step_overhead_s + rcfg.per_token_s * step_tokens
+                   + rcfg.fetch_stall_s * (st.promotions - p0)
+                   + rcfg.stall_weight * ((st.fetch_time - f0)
+                                          + (st.recompute_time - r0)))
+            # per-token virtual timestamps (decode emits <=1/step/request)
+            for t in tracked.values():
+                if t.done_v is not None:
+                    continue
+                while len(t.token_times) < len(t.req.generated):
+                    t.token_times.append(vt)
+                if t.req.phase is Phase.DONE:
+                    t.done_v = vt
+                    in_flight[t.session] = None
+                    ready_v[t.session] = vt + rcfg.think_time_s
+        else:
+            # idle: jump the clock to the next session arrival
+            nxt = min((ready_v[i] for i in range(n_sess) if pending(i)),
+                      default=vt)
+            vt = max(vt, nxt)
+        if steps >= rcfg.max_steps:
+            break
+    eng.shutdown()
+
+    done = [t for t in tracked.values() if t.done_v is not None]
+    seen_total = sum(t.seen_blocks for t in done)
+    hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
+    served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
+    ttfts = [t.token_times[0] - t.submit_v for t in done if t.token_times]
+    tbts = [b - a for t in done
+            for a, b in zip(t.token_times, t.token_times[1:])]
+    gen = sum(len(t.req.generated) for t in done)
+    mst = eng.manager.stats
+    return ServingReplayResult(
+        workload=rcfg.workload, policy=rcfg.policy,
+        engine_hit_rate=hot / seen_total if seen_total else 0.0,
+        reuse_rate=served / seen_total if seen_total else 0.0,
+        seen_blocks=seen_total,
+        manager_hit_rate=mst.hit_rate,
+        manager_replay_hit_rate=mst.replay_hit_rate,
+        hot_hits_t0=mst.hot_hits_t0, hot_hits_t1=mst.hot_hits_t1,
+        cow_share_hits=eng.cow_share_hits, inject_hits=eng.inject_hits,
+        promotions=mst.promotions, demotions=mst.demotions,
+        requests_done=len(done), sessions=n_sess,
+        generated_tokens=gen,
+        ttft_p50=_percentile(ttfts, 0.50), ttft_p95=_percentile(ttfts, 0.95),
+        tbt_p50=_percentile(tbts, 0.50), tbt_p95=_percentile(tbts, 0.95),
+        throughput_tok_s=gen / vt if vt > 0 else 0.0,
+        virtual_time_s=vt, steps=steps, wall_s=time.time() - t_wall)
+
+
+def run_replay_serving_table(
+        workloads: Sequence[str] = ("sharegpt", "lmsys", "agentic"),
+        policies: Sequence[str] = ("lru", "ema", "bayesian"), *,
+        n_sessions: int = 12, seed: int = 0, max_turns: int = 6,
+        ) -> List[ServingReplayResult]:
+    """Table-V-style sweep through the live engine (one seed: the live
+    replay is ~100x the cost of the block-level replay per run; the
+    block-level ``run_table_v`` remains the multi-seed statistics)."""
+    out = []
+    for wl in workloads:
+        for policy in policies:
+            out.append(run_serving_replay(ServingReplayConfig(
+                workload=wl, policy=policy, n_sessions=n_sessions,
+                seed=seed, max_turns=max_turns)))
+    return out

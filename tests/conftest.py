@@ -7,3 +7,6 @@ def pytest_configure(config):
     flags = os.environ.get("XLA_FLAGS", "")
     assert "host_platform_device_count" not in flags, (
         "XLA_FLAGS device-count virtualization must not leak into tests")
+    config.addinivalue_line(
+        "markers", "slow: multi-minute end-to-end runs (CPU interpret "
+        "mode); deselect with -m 'not slow'")
