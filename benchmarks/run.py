@@ -257,6 +257,60 @@ def replay_benchmark(fast: bool = False) -> None:
         _row(f"{key}.wall_s", round(r.wall_s, 1))
 
 
+def cluster_benchmark(fast: bool = False) -> None:
+    """Fleet-level trace replay: the LMSYS trace through a multi-replica
+    ``ReplicaCluster`` (``serving/cluster.py``), sweeping ``n_replicas x
+    routing_policy`` under the shared virtual clock, plus one failover
+    cell (2 replicas, kill one mid-replay).
+
+    The headline question: does consistent-hash session affinity
+    (``affine``) recover the single-engine hit rate that session-blind
+    ``round_robin`` routing fragments across replica-private caches?
+    The 1-replica affine cell should match ``--table replay``'s lmsys
+    bayesian cell within noise (same harness, fleet of one); at n>=2
+    affine must beat round-robin on fleet hit rate.  See
+    ``docs/SERVING.md`` for the full column glossary.
+    """
+    from repro.traces.serving_replay import (ClusterReplayConfig,
+                                             run_cluster_replay,
+                                             run_cluster_table)
+    print("# Cluster — multi-replica LMSYS replay, n_replicas x routing"
+          + (" [fast]" if fast else ""))
+    n_sessions = 6 if fast else 12
+    max_turns = 4 if fast else 6
+    exp = PAPER["table5"]["lmsys"][2]      # Table V lmsys bayesian
+    rows = run_cluster_table(n_replicas=(1, 2) if fast else (1, 2, 4),
+                             n_sessions=n_sessions, max_turns=max_turns)
+    for r in rows:
+        key = f"cluster.lmsys.n{r.n_replicas}.{r.routing}"
+        _row(f"{key}.fleet_hit_pct", round(100 * r.fleet_hit_rate, 1), exp)
+        _row(f"{key}.fleet_reuse_pct", round(100 * r.fleet_reuse_rate, 1))
+        for p in r.per_replica:
+            _row(f"{key}.{p.name}.hit_pct", round(100 * p.hit_rate, 1))
+            _row(f"{key}.{p.name}.requests", p.requests_done)
+        _row(f"{key}.redispatched", r.redispatched, 0)
+        _row(f"{key}.reprefill_tokens", r.reprefill_tokens, 0)
+        _row(f"{key}.ttft_p50_ms", round(1e3 * r.ttft_p50, 1))
+        _row(f"{key}.ttft_p95_ms", round(1e3 * r.ttft_p95, 1))
+        _row(f"{key}.tbt_p95_ms", round(1e3 * r.tbt_p95, 1))
+        _row(f"{key}.virtual_tok_per_s", round(r.throughput_tok_s, 1))
+        _row(f"{key}.wall_s", round(r.wall_s, 1))
+    # failover cell: 2 affine replicas, one killed mid-replay — the
+    # graceful-degradation recomputation tax
+    f = run_cluster_replay(ClusterReplayConfig(
+        workload="lmsys", policy="bayesian", n_sessions=n_sessions,
+        max_turns=max_turns, n_replicas=2, routing="affine",
+        fail_replica_after_turns=max(2, n_sessions // 2)))
+    key = "cluster.lmsys.failover.n2.affine"
+    _row(f"{key}.fleet_hit_pct", round(100 * f.fleet_hit_rate, 1))
+    _row(f"{key}.redispatched", f.redispatched)
+    _row(f"{key}.reprefill_tokens", f.reprefill_tokens)
+    _row(f"{key}.failed_replicas", len(f.failed_replicas), 1)
+    _row(f"{key}.ttft_p95_ms", round(1e3 * f.ttft_p95, 1))
+    _row(f"{key}.requests", f.requests_done)
+    _row(f"{key}.wall_s", round(f.wall_s, 1))
+
+
 def micro_benchmarks() -> None:
     """System micro-benchmarks backing the paper's latency claims."""
     from repro.core.bayesian import BayesianReusePredictor
@@ -478,7 +532,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--table", default=None,
                     help="run one: 1,3,4,5,6,7,8,9,micro,kernels,serving,"
-                         "ttft,replay")
+                         "ttft,replay,cluster")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serving benchmark: paged block-table KV path "
@@ -521,6 +575,8 @@ def main() -> None:
         ttft_benchmark(chunked=args.chunked, fast=args.fast)
     if sel == "replay":
         replay_benchmark(fast=args.fast)
+    if sel == "cluster":
+        cluster_benchmark(fast=args.fast)
     print(f"# done in {time.time() - t0:.1f}s")
 
 

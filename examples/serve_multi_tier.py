@@ -8,8 +8,8 @@ import numpy as np
 
 from repro.config import reduce_config
 from repro.configs import get_config
-from repro.launch.serve import ReplicaCluster
 from repro.serving import EngineConfig, SamplingParams, ServingEngine
+from repro.serving.cluster import ReplicaCluster
 
 
 def main():
@@ -63,9 +63,12 @@ def main():
         e.step()
     victim = sorted(cluster.engines)[0]
     lost = cluster.fail_replica(victim)
-    print(f"killed {victim}: re-dispatched {lost} in-flight requests")
+    print(f"killed {victim}: re-dispatched {lost} in-flight requests, "
+          f"{cluster.reprefill_tokens} tokens to re-prefill")
     agg = cluster.run()
-    print("all completed:", agg["done"])
+    print("all completed:", agg["done"],
+          f" fleet hot hit-rate: {agg['fleet']['hit_rate_hot']:.2%}")
+    cluster.shutdown()
 
 
 if __name__ == "__main__":

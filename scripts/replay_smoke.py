@@ -1,15 +1,20 @@
 #!/usr/bin/env python3
 """CI smoke for the trace→engine serving replay: a tiny agentic trace
 (2 sessions x 2 turns) through the live ServingEngine, asserting the
-harness completes and produces sane accounting.
+harness completes and produces sane accounting — then the same trace
+through a 2-replica ReplicaCluster with a mid-replay failover,
+asserting every turn still completes and the redispatch/re-prefill
+accounting is consistent.
 
     PYTHONPATH=src python scripts/replay_smoke.py
 """
-from repro.traces.serving_replay import (ServingReplayConfig,
+from repro.traces.serving_replay import (ClusterReplayConfig,
+                                         ServingReplayConfig,
+                                         run_cluster_replay,
                                          run_serving_replay)
 
 
-def main() -> None:
+def single_engine_smoke() -> None:
     r = run_serving_replay(ServingReplayConfig(
         workload="agentic", policy="bayesian", n_sessions=2, max_turns=2,
         max_steps=500))
@@ -22,6 +27,34 @@ def main() -> None:
           f"hit {100 * r.engine_hit_rate:.1f}%, "
           f"reuse {100 * r.reuse_rate:.1f}%, "
           f"wall {r.wall_s:.1f}s")
+
+
+def cluster_smoke() -> None:
+    """2 replicas x 2 sessions, round-robin (both replicas guaranteed
+    traffic), one replica killed after the first completed turn — the
+    failover path must redispatch and still finish every turn."""
+    r = run_cluster_replay(ClusterReplayConfig(
+        workload="agentic", policy="bayesian", n_sessions=2, max_turns=2,
+        n_replicas=2, routing="round_robin", fail_replica_after_turns=1,
+        max_steps=500))
+    assert r.requests_done == 4, f"expected 4 turns, got {r.requests_done}"
+    assert len(r.failed_replicas) == 1
+    assert r.redispatched >= 0 and r.reprefill_tokens >= 0
+    assert (r.redispatched == 0) == (r.reprefill_tokens == 0)
+    assert 0.0 <= r.fleet_hit_rate <= r.fleet_reuse_rate <= 1.0
+    assert sum(p.requests_done for p in r.per_replica) == r.requests_done
+    assert r.virtual_time_s > 0.0
+    print(f"cluster smoke ok: {r.requests_done} turns on "
+          f"{r.n_replicas} replicas ({len(r.failed_replicas)} failed), "
+          f"fleet hit {100 * r.fleet_hit_rate:.1f}%, "
+          f"redispatched {r.redispatched}, "
+          f"re-prefilled {r.reprefill_tokens} tokens, "
+          f"wall {r.wall_s:.1f}s")
+
+
+def main() -> None:
+    single_engine_smoke()
+    cluster_smoke()
 
 
 if __name__ == "__main__":

@@ -442,6 +442,23 @@ class PredictiveCacheManager:
                 self.metas.pop(bid, None)
                 self._payloads.pop(bid, None)
 
+    def release_all(self) -> None:
+        """Drop every block registration and tier-resident copy (replica
+        failover teardown): payloads, tier residency, block metadata,
+        the radix prefix index and the dedup store are all cleared so
+        nothing keeps the dead replica's KV alive.  ``self.stats`` is
+        deliberately retained — the cluster aggregates it after the
+        replica is gone."""
+        with self._lock:
+            for tier in self.hierarchy.tiers:
+                for bid in tier.blocks():
+                    tier.evict(bid)
+            self.metas.clear()
+            self._payloads.clear()
+            self.radix = RadixTree(self.block_tokens)
+            if self.store is not None:
+                self.store = ContentStore()
+
     def age_all(self) -> None:
         if isinstance(self.evictor, EMAPolicy):
             for m in self.metas.values():

@@ -1,83 +1,37 @@
-"""Serving launcher: single engine or a simulated multi-replica cluster.
+"""Serving launcher CLI: single engine or a multi-replica cluster.
 
 ``python -m repro.launch.serve --arch llama3.2-1b --reduced --requests 32``
 
-The cluster dispatcher demonstrates the large-scale serving properties:
+The cluster machinery lives in ``repro/serving/cluster.py``
+(``ReplicaCluster`` + pluggable routing policies); this module is a thin
+command line over it and demonstrates the large-scale serving
+properties:
+
   * session affinity via the same consistent-hash ring as the RDMA tier
-    (sessions stick to replicas -> prefix caches stay warm);
-  * replica failure: the ring drops the node, in-flight requests
-    re-dispatch to the successor replica (lost KV blocks are re-prefilled
-    — exactly the paper's graceful-degradation story);
-  * elastic scale-out: adding a replica remaps ~1/n of sessions.
+    (sessions stick to replicas -> prefix caches stay warm) — or
+    round-robin / least-loaded routing via ``--routing``;
+  * replica failure (``--fail-replica``): the router drops the node,
+    in-flight requests re-dispatch to a successor replica and lost KV
+    blocks are re-prefilled — the paper's graceful-degradation story;
+  * elastic scale-out (``--add-replica``): a replica joins mid-run,
+    remapping ~1/n of sessions.
+
+See ``docs/SERVING.md`` for the operations guide.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.config import reduce_config
 from repro.configs import get_config
-from repro.core.tiers import ConsistentHashRing
 from repro.serving import EngineConfig, SamplingParams, ServingEngine
-from repro.serving.request import Request
-
-
-class ReplicaCluster:
-    """N engine replicas + consistent-hash session dispatch."""
-
-    def __init__(self, cfg, engine_cfg: EngineConfig, n_replicas: int = 2):
-        self.engines: Dict[str, ServingEngine] = {}
-        self.ring = ConsistentHashRing()
-        self.cfg = cfg
-        self.ecfg = engine_cfg
-        for i in range(n_replicas):
-            self.add_replica(f"replica{i}")
-        self.redispatched = 0
-
-    def add_replica(self, name: str) -> None:
-        # replicas share nothing; params re-init deterministically
-        self.engines[name] = ServingEngine(self.cfg, self.ecfg)
-        self.ring.add_node(name)
-
-    def fail_replica(self, name: str) -> int:
-        """Kill a replica; requeue its unfinished requests elsewhere."""
-        eng = self.engines.pop(name)
-        self.ring.remove_node(name)
-        lost: List[Request] = list(eng.scheduler.waiting) \
-            + list(eng.scheduler.running.values()) \
-            + list(eng.scheduler.preempted)
-        for req in lost:
-            req.phase = req.phase.WAITING
-            req.generated.clear()
-            req.slot = -1
-            req.block_ids = []
-            target = self.ring.lookup(req.session_id or str(req.request_id))
-            self.engines[target].scheduler.submit(req)
-            self.redispatched += 1
-        eng.shutdown()
-        return len(lost)
-
-    def submit(self, prompt, *, session_id: str, **kw) -> Request:
-        target = self.ring.lookup(session_id)
-        return self.engines[target].submit(prompt, session_id=session_id,
-                                           **kw)
-
-    def run(self, max_steps: int = 10_000) -> dict:
-        steps = 0
-        while steps < max_steps and any(e.scheduler.has_work()
-                                        for e in self.engines.values()):
-            for e in self.engines.values():
-                if e.scheduler.has_work():
-                    e.step()
-            steps += 1
-        agg = {"replicas": {n: e.stats() for n, e in self.engines.items()},
-               "redispatched": self.redispatched}
-        agg["done"] = sum(s["scheduler"]["done"]
-                          for s in agg["replicas"].values())
-        return agg
+from repro.serving.cluster import (ROUTERS, ReplicaCluster)  # noqa: F401
+#                                  (ReplicaCluster re-exported here for
+#                                   backward compatibility with callers
+#                                   of the pre-promotion location)
 
 
 def main(argv=None) -> int:
@@ -87,8 +41,12 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--routing", default="affine", choices=sorted(ROUTERS),
+                    help="cluster request routing policy")
     ap.add_argument("--fail-replica", action="store_true",
-                    help="kill replica0 mid-run (fault-tolerance demo)")
+                    help="kill a replica mid-run (fault-tolerance demo)")
+    ap.add_argument("--add-replica", action="store_true",
+                    help="scale out by one replica mid-run")
     ap.add_argument("--policy", default="bayesian",
                     choices=["bayesian", "ema", "lru"])
     args = ap.parse_args(argv)
@@ -111,8 +69,10 @@ def main(argv=None) -> int:
                        params=SamplingParams(max_new_tokens=args.max_new),
                        session_id=f"s{i % 4}", block_type="system_prompt")
         stats = eng.run()
+        eng.shutdown()
     else:
-        cluster = ReplicaCluster(cfg, ecfg, n_replicas=args.replicas)
+        cluster = ReplicaCluster(cfg, ecfg, n_replicas=args.replicas,
+                                 routing=args.routing)
         for i in range(args.requests):
             user = [int(t) for t in rng.integers(0, cfg.vocab_size,
                                                  size=32)]
@@ -120,11 +80,16 @@ def main(argv=None) -> int:
                            params=SamplingParams(max_new_tokens=args.max_new),
                            block_type="system_prompt")
             if args.fail_replica and i == args.requests // 2:
-                for e in cluster.engines.values():
-                    e.step()
-                lost = cluster.fail_replica(sorted(cluster.engines)[0])
-                print(f"killed replica, re-dispatched {lost} requests")
+                cluster.step()
+                victim = sorted(cluster.engines)[0]
+                lost = cluster.fail_replica(victim)
+                print(f"killed {victim}, re-dispatched {lost} requests")
+            if args.add_replica and i == args.requests // 2:
+                name = cluster.add_replica()
+                print(f"scaled out: {name} joined "
+                      f"({cluster.n_replicas} replicas)")
         stats = cluster.run()
+        cluster.shutdown()
     dt = time.time() - t0
     done = (stats["scheduler"]["done"] if args.replicas == 1
             else stats["done"])
@@ -137,7 +102,10 @@ def main(argv=None) -> int:
               f"prefix-hit blocks: {s['prefix_hit_blocks']}  "
               f"hot hit-rate: {c['hit_rate_hot']:.2%}")
     else:
-        print(f"re-dispatched after failure: {stats['redispatched']}")
+        print(f"routing: {stats['routing']}  "
+              f"fleet hot hit-rate: {stats['fleet']['hit_rate_hot']:.2%}")
+        print(f"re-dispatched after failure: {stats['redispatched']}  "
+              f"re-prefilled tokens: {stats['reprefill_tokens']}")
     return 0
 
 

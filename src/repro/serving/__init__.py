@@ -1,4 +1,7 @@
 from repro.serving.block_allocator import AllocatorStats, BlockAllocator
+from repro.serving.cluster import (LeastLoadedRouter, ReplicaCluster,
+                                   RoundRobinRouter, RoutingPolicy,
+                                   SessionAffinityRouter, make_router)
 from repro.serving.engine import ServingEngine, EngineConfig
 from repro.serving.kvcache import PagedKVCache, SlotKVCache
 from repro.serving.request import Request, SamplingParams, Phase

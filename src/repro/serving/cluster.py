@@ -1,0 +1,335 @@
+"""Multi-replica serving cluster: N share-nothing ``ServingEngine``
+replicas behind a pluggable request router, with mid-run failover and
+elastic scale-out (paper §VII scaling / graceful degradation).
+
+Promoted out of ``launch/serve.py`` (which is now a thin CLI over this
+module) so the trace replay can evaluate fleet-level behaviour — the
+paper's throughput and cost claims are fleet-level: consistent-hash
+session affinity keeps each replica's prefix cache warm, and failover
+re-prefills the lost KV on the successor replica.
+
+Routing policies (``make_router``):
+
+  * ``affine`` — consistent-hash session affinity over the same ring
+    implementation as the RDMA tier (``core/tiers.ConsistentHashRing``).
+    A session's every turn lands on the same replica, so cross-turn
+    radix-prefix reuse keeps working; node join/leave remaps ~1/n of
+    the session space.
+  * ``round_robin`` — classic load spreading, deliberately blind to
+    sessions: consecutive turns of one conversation land on different
+    replicas, fragmenting the prefix cache.  This is the naive baseline
+    the cluster replay (``benchmarks/run.py --table cluster``) measures
+    the affinity win against.
+  * ``least_loaded`` — route to the replica with the fewest live
+    requests (waiting + running + preempted + blocked); ties break by
+    name for determinism.
+
+Failover (``fail_replica``): the dead replica's scheduler is drained —
+waiting, running, preempted AND transfer-blocked requests — and every
+request is re-dispatched through the router after
+``Request.reset_for_redispatch()`` wipes the per-request accounting
+that referred to the dead engine (generated tokens, slot, block ids,
+chunk cursor, prefix/hot hit counts).  The dead engine's transfer
+worker is closed and its cache-manager/tier registrations are released
+(``ServingEngine.release_resources``) instead of leaking; its
+``ManagerStats`` are retained for fleet aggregation.  The successor
+replica re-prefills the lost KV from scratch — the recomputation tax
+the paper's graceful-degradation story pays, surfaced here as
+``reprefill_tokens``.
+
+Scale-out (``add_replica``): a new share-nothing engine joins the
+router; under ``affine`` routing ~1/n of the session space remaps to it
+(cold prefix cache until those sessions resubmit their prefixes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.cache_manager import ManagerStats
+from repro.core.tiers import ConsistentHashRing
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# Routing policies
+# ---------------------------------------------------------------------------
+class RoutingPolicy:
+    """Maps a session key to a replica name.  Stateful: policies are
+    told about replica join/leave so failover and scale-out re-route
+    without the cluster knowing policy internals."""
+
+    name = "?"
+
+    def add_replica(self, replica: str) -> None:
+        raise NotImplementedError
+
+    def remove_replica(self, replica: str) -> None:
+        raise NotImplementedError
+
+    def route(self, key: str,
+              engines: Dict[str, "ServingEngine"]) -> str:
+        raise NotImplementedError
+
+
+class SessionAffinityRouter(RoutingPolicy):
+    """Consistent-hash session affinity (the paper's default).
+
+    ``salt`` seeds the key hashing, so tests can pin — or deliberately
+    vary — the session→replica assignment without renaming replicas.
+    """
+
+    name = "affine"
+
+    def __init__(self, vnodes: int = 64, salt: str = ""):
+        self.ring = ConsistentHashRing(vnodes=vnodes)
+        self.salt = salt
+
+    def add_replica(self, replica: str) -> None:
+        self.ring.add_node(replica)
+
+    def remove_replica(self, replica: str) -> None:
+        self.ring.remove_node(replica)
+
+    def route(self, key: str, engines=None) -> str:
+        return self.ring.lookup(f"{self.salt}:{key}" if self.salt else key)
+
+
+class RoundRobinRouter(RoutingPolicy):
+    """Session-blind load spreading — the fragmentation baseline."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._replicas: List[str] = []
+        self._next = 0
+
+    def add_replica(self, replica: str) -> None:
+        if replica not in self._replicas:
+            self._replicas.append(replica)
+            self._replicas.sort()
+
+    def remove_replica(self, replica: str) -> None:
+        if replica in self._replicas:
+            self._replicas.remove(replica)
+
+    def route(self, key: str, engines=None) -> str:
+        if not self._replicas:
+            raise RuntimeError("no replicas")
+        out = self._replicas[self._next % len(self._replicas)]
+        self._next += 1
+        return out
+
+
+class LeastLoadedRouter(RoutingPolicy):
+    """Route to the replica with the fewest live requests."""
+
+    name = "least_loaded"
+
+    def __init__(self):
+        self._replicas: List[str] = []
+
+    def add_replica(self, replica: str) -> None:
+        if replica not in self._replicas:
+            self._replicas.append(replica)
+            self._replicas.sort()
+
+    def remove_replica(self, replica: str) -> None:
+        if replica in self._replicas:
+            self._replicas.remove(replica)
+
+    @staticmethod
+    def _load(eng: "ServingEngine") -> int:
+        return eng.scheduler.live_count()
+
+    def route(self, key: str, engines: Dict[str, "ServingEngine"]) -> str:
+        if not self._replicas:
+            raise RuntimeError("no replicas")
+        return min(self._replicas, key=lambda n: (self._load(engines[n]), n))
+
+
+ROUTERS: Dict[str, Callable[[], RoutingPolicy]] = {
+    "affine": SessionAffinityRouter,
+    "round_robin": RoundRobinRouter,
+    "least_loaded": LeastLoadedRouter,
+}
+
+
+def make_router(policy: str, **kw) -> RoutingPolicy:
+    if policy not in ROUTERS:
+        raise ValueError(f"unknown routing policy {policy!r} "
+                         f"(have {sorted(ROUTERS)})")
+    return ROUTERS[policy](**kw)
+
+
+# ---------------------------------------------------------------------------
+# The cluster
+# ---------------------------------------------------------------------------
+class ReplicaCluster:
+    """N share-nothing engine replicas + pluggable request routing.
+
+    ``engine_factory`` builds one replica engine; the default constructs
+    ``ServingEngine(cfg, engine_cfg)`` (params re-init deterministically
+    — replicas share nothing).  The trace replay passes a factory that
+    applies its replay tier specs and virtual-clock engine config.
+    """
+
+    def __init__(self, cfg=None, engine_cfg: Optional[EngineConfig] = None,
+                 n_replicas: int = 2, *, routing: str = "affine",
+                 engine_factory: Optional[Callable[[], ServingEngine]] = None,
+                 router: Optional[RoutingPolicy] = None,
+                 name_prefix: str = "replica"):
+        if engine_factory is None:
+            if cfg is None:
+                raise ValueError("need cfg+engine_cfg or engine_factory")
+            engine_factory = lambda: ServingEngine(cfg, engine_cfg)  # noqa: E731
+        self._factory = engine_factory
+        self._prefix = name_prefix
+        self._next_replica = 0
+        self.router = router if router is not None else make_router(routing)
+        self.engines: Dict[str, ServingEngine] = {}
+        # failed replicas keep ONLY their ManagerStats and completed
+        # count for fleet rollup — retaining the dead engine would keep
+        # its params and KV pool (the dominant allocations) alive
+        self.failed_stats: Dict[str, ManagerStats] = {}
+        self.failed_done: Dict[str, int] = {}
+        self.redispatched = 0
+        self.reprefill_tokens = 0          # prompt tokens whose KV was lost
+        self._anon_ids = 0
+        # (request_id, from_replica, to_replica) per failover redispatch
+        self.redispatch_log: List[Tuple[int, str, str]] = []
+        for _ in range(n_replicas):
+            self.add_replica()
+
+    # -- membership ---------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def add_replica(self, name: Optional[str] = None) -> str:
+        """Join a fresh share-nothing replica; under affine routing
+        ~1/n of the session space remaps onto it."""
+        if name is None:
+            name = f"{self._prefix}{self._next_replica}"
+        self._next_replica += 1
+        if name in self.engines or name in self.failed_stats:
+            # a failed replica's name stays reserved: reusing it would
+            # collide the stats rollups and mark the newcomer failed
+            raise ValueError(f"replica {name!r} already exists")
+        self.engines[name] = self._factory()
+        self.router.add_replica(name)
+        return name
+
+    def fail_replica(self, name: str) -> int:
+        """Kill a replica: drain every live request (waiting, running,
+        preempted, transfer-blocked), reset their per-request accounting,
+        re-dispatch through the router, and release the dead engine's
+        manager/tier registrations.  Returns the redispatch count."""
+        if len(self.engines) <= 1:
+            # check BEFORE mutating: there is nowhere to re-dispatch,
+            # and popping first would leave an empty, unusable cluster
+            raise RuntimeError("cannot fail the last replica")
+        eng = self.engines.pop(name)
+        self.router.remove_replica(name)
+        lost = eng.scheduler.drain_requests()
+        for req in lost:
+            # KV (including any generated tokens) died with the replica:
+            # the successor re-prefills the prompt from scratch
+            self.reprefill_tokens += req.prompt_len + len(req.generated)
+            req.reset_for_redispatch()
+            target = self.route(req.session_id or str(req.request_id))
+            self.engines[target].scheduler.submit(req)
+            self.redispatched += 1
+            self.redispatch_log.append((req.request_id, name, target))
+        self.failed_stats[name] = eng.manager.stats
+        self.failed_done[name] = len(eng.scheduler.done)
+        eng.release_resources()
+        return len(lost)
+
+    # -- dispatch -----------------------------------------------------------
+    def route(self, session_key: str) -> str:
+        return self.router.route(session_key, self.engines)
+
+    def submit(self, prompt, *, session_id: Optional[str] = None,
+               **kw) -> Request:
+        # session-less requests route by a fresh surrogate key so they
+        # still spread across the ring
+        key = session_id if session_id is not None \
+            else f"anon{self._anon_ids}"
+        self._anon_ids += 1
+        target = self.route(key)
+        return self.engines[target].submit(prompt, session_id=session_id,
+                                           **kw)
+
+    # -- stepping -----------------------------------------------------------
+    def busy(self) -> List[Tuple[str, ServingEngine]]:
+        """Replicas with live work, in stable name order."""
+        return [(n, e) for n, e in sorted(self.engines.items())
+                if e.scheduler.has_work()]
+
+    def step(self) -> int:
+        """One fleet iteration: every busy replica steps once (replicas
+        run concurrently in a real deployment).  Returns tokens
+        produced fleet-wide."""
+        produced = 0
+        for _, eng in self.busy():
+            produced += eng.step()
+        return produced
+
+    def has_work(self) -> bool:
+        return any(e.scheduler.has_work() for e in self.engines.values())
+
+    def run(self, max_steps: int = 10_000) -> dict:
+        steps = 0
+        while steps < max_steps and self.has_work():
+            self.step()
+            steps += 1
+        return self.stats()
+
+    # -- stats --------------------------------------------------------------
+    def manager_stats(self, include_failed: bool = True
+                      ) -> Dict[str, ManagerStats]:
+        """Per-replica ``ManagerStats`` (failed replicas retain theirs
+        for fleet aggregation)."""
+        out = {n: e.manager.stats for n, e in self.engines.items()}
+        if include_failed:
+            out.update(self.failed_stats)
+        return out
+
+    def fleet_manager_stats(self) -> ManagerStats:
+        """Fleet-wide rollup: field-wise sum over every replica that
+        ever served traffic (hit rates derive from the summed counts)."""
+        agg = ManagerStats()
+        for ms in self.manager_stats().values():
+            for f in dataclasses.fields(ManagerStats):
+                if f.name == "tier_hits":
+                    for t, n in ms.tier_hits.items():
+                        agg.tier_hits[t] = agg.tier_hits.get(t, 0) + n
+                else:
+                    setattr(agg, f.name,
+                            getattr(agg, f.name) + getattr(ms, f.name))
+        return agg
+
+    def stats(self) -> dict:
+        agg = {"replicas": {n: e.stats()
+                            for n, e in sorted(self.engines.items())},
+               "failed_replicas": sorted(self.failed_stats),
+               "routing": self.router.name,
+               "redispatched": self.redispatched,
+               "reprefill_tokens": self.reprefill_tokens}
+        agg["done"] = sum(s["scheduler"]["done"]
+                          for s in agg["replicas"].values())
+        agg["done"] += sum(self.failed_done.values())
+        fleet = self.fleet_manager_stats()
+        agg["fleet"] = {"hit_rate_hot": fleet.hit_rate,
+                        "accesses": fleet.accesses,
+                        "hot_hits_t0": fleet.hot_hits_t0,
+                        "hot_hits_t1": fleet.hot_hits_t1,
+                        "promotions": fleet.promotions,
+                        "demotions": fleet.demotions}
+        return agg
+
+    def shutdown(self) -> None:
+        for eng in self.engines.values():
+            eng.shutdown()

@@ -604,3 +604,15 @@ class ServingEngine:
             self.worker.drain(timeout=5.0)
             self.worker.close()
             self.worker = None
+
+    def release_resources(self) -> None:
+        """Failover teardown: close the transfer worker and release the
+        cache manager's block/tier registrations (payload copies, tier
+        residency, radix index, dedup store) so a failed replica frees
+        its memory instead of leaking it.  ``ManagerStats`` survive for
+        fleet-level aggregation."""
+        self.shutdown()
+        self._preempted_payloads.clear()
+        self._demote_tickets.clear()
+        self._inflight_prefetch.clear()
+        self.manager.release_all()

@@ -81,6 +81,24 @@ class Request:
             return None
         return self.t_first_token - self.arrival
 
+    def reset_for_redispatch(self) -> None:
+        """Wipe per-engine runtime state before re-dispatching to a
+        different replica (failover): the slot, block ids, chunk cursor
+        and prefix/hot hit accounting all referred to the dead engine's
+        pool and cache manager, and the generated tokens' KV died with
+        it — the successor re-prefills the prompt from scratch."""
+        self.phase = Phase.WAITING
+        self.phase_start = time.monotonic()
+        self.generated.clear()
+        self.slot = -1
+        self.block_ids = []
+        self.prefix_hit_blocks = 0
+        self.hot_hit_blocks = 0
+        self.prefill_tokens = None
+        self.prefill_pos = 0
+        self.t_first_token = None
+        self.t_done = None
+
     def finished(self) -> bool:
         p = self.params
         if len(self.generated) >= p.max_new_tokens:

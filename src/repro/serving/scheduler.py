@@ -176,9 +176,30 @@ class Scheduler:
         self.stragglers += len(out)
         return out
 
+    def drain_requests(self) -> List[Request]:
+        """Remove and return every live request — waiting, running,
+        preempted AND transfer-blocked — in a deterministic order
+        (failover requeue hook for the cluster dispatcher; finished
+        requests stay in ``done``)."""
+        out: List[Request] = list(self.waiting)
+        out.extend(self.running[rid] for rid in sorted(self.running))
+        out.extend(self.preempted)
+        out.extend(self.blocked[rid] for rid in sorted(self.blocked))
+        self.waiting.clear()
+        self.running.clear()
+        self.preempted.clear()
+        self.blocked.clear()
+        return out
+
     def has_work(self) -> bool:
         return bool(self.waiting or self.running or self.preempted
                     or self.blocked)
+
+    def live_count(self) -> int:
+        """Live (unfinished) requests across every queue — the load
+        signal for least-loaded routing and failover victim choice."""
+        return (len(self.waiting) + len(self.running)
+                + len(self.preempted) + len(self.blocked))
 
     def session_stats(self) -> Dict[str, dict]:
         """Per-session rollup over finished requests (the trace replay's

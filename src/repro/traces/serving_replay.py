@@ -1,13 +1,13 @@
 """Trace→engine serving replay: the paper's §V-E evaluation driven
-through the real ``ServingEngine`` instead of the standalone cache
-manager.
+through the real ``ServingEngine`` — single-engine or multi-replica —
+instead of the standalone cache manager.
 
 ``traces/replay.py`` replays block-access traces against the
 ``PredictiveCacheManager`` alone — scheduling, paged-pool CoW sharing,
 chunked prefill and tier-transfer latency never enter the picture.  This
 adapter closes that gap: it converts the same ShareGPT / LMSYS / agentic
 session generators (``traces/generators.py``) into **timed multi-turn
-request streams** and drives them open-loop against a live engine under
+request streams** and drives them open-loop against live engines under
 a virtual clock:
 
   * each turn submits the **full conversation prefix** (system prompt +
@@ -22,12 +22,37 @@ a virtual clock:
     session the next turn submits after the previous turn's completion
     plus a think-time gap (closed-loop per conversation, like a real
     chat client);
-  * the virtual clock advances per engine step by a modelled step time:
-    a fixed overhead, a per-token compute cost, and the manager's
-    modelled tier-fetch / recompute stall for that step — so hit-rate
-    differences between policies surface in TTFT/TBT, which is exactly
-    the serving-layer interaction KVDrive (arXiv 2605.18071) argues
-    block-level replay cannot capture.
+  * the virtual clock advances per fleet step by a modelled step time:
+    a fixed overhead, a per-token compute cost, and the modelled
+    tier-fetch / recompute stall for that step (see *Fetch-stall
+    model*) — so hit-rate differences between policies surface in
+    TTFT/TBT, which is exactly the serving-layer interaction KVDrive
+    (arXiv 2605.18071) argues block-level replay cannot capture.
+
+**Multi-replica replay** (``run_cluster_replay``): the same turn
+streams route through a ``serving/cluster.py::ReplicaCluster`` — every
+busy replica steps once per fleet iteration (replicas run concurrently,
+so the clock advances by the *slowest* replica's step time), sessions
+route by the configured policy (consistent-hash affinity vs round-robin
+vs least-loaded), and mid-replay ``fail_replica`` / ``add_replica``
+events measure the failover recomputation tax and elastic-scale-out
+remapping.  Hit rates are reported per replica and fleet-wide against
+the *global* previously-seen ground truth, so routing that fragments
+sessions across replicas shows up directly as a fleet hit-rate drop —
+the cross-replica placement effect the KV-cache management survey
+(arXiv 2607.02574) calls the deciding factor at scale.
+
+Fetch-stall model: at paper scale a KV block is MBs (the reduced
+model's blocks are KBs), so the virtual clock cannot reuse the
+manager's reduced-size fetch accounting verbatim.  With
+``fetch_stall_model="spec"`` (default) every demand fetch from a
+non-hot tier stalls the clock by that tier's
+``TierSpec.transfer_time`` evaluated at the **target model's** block
+bytes (``target_model``, default llama-3-70b); asynchronous prefetch
+promotions are not charged — they overlap compute, which is the
+paper's §IV design point.  ``fetch_stall_model="fixed"`` keeps the
+previous behaviour: a flat ``fetch_stall_s`` per promotion plus the
+reduced-size fetch/recompute accounting.
 
 Tier capacities reuse ``traces/replay.py::replay_tier_specs`` (scaled-
 down tiers 0/1 so the reusable working set exceeds the hot set) with
@@ -38,12 +63,11 @@ Hit-rate definition (Table V analogue, measured at the engine):
 ``engine_hit_rate = hot-hit prompt blocks / previously-seen prompt
 blocks``.  The denominator is trace ground truth — a prompt block whose
 content appeared in an earlier-submitted turn (first touch excluded,
-exactly like ``replay.py``).  The numerator is the engine's own
-accounting (``Request.hot_hit_blocks``): blocks actually served from
-tiers 0-1.  Content that is resident but unreachable because the radix
-prefix diverged (e.g. history truncation) therefore counts as a miss —
-at the serving layer that compute is really paid, which is the point of
-evaluating end-to-end.
+exactly like ``replay.py``), **fleet-wide**: under multi-replica
+routing a block previously seen on replica A but routed to replica B
+counts against B's hit rate, because at the serving layer that compute
+really is re-paid.  The numerator is the engine's own accounting
+(``Request.hot_hit_blocks``): blocks actually served from tiers 0-1.
 """
 from __future__ import annotations
 
@@ -56,6 +80,7 @@ import numpy as np
 
 from repro.config import ModelConfig, reduce_config
 from repro.core import sizing
+from repro.serving.cluster import ReplicaCluster, make_router
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Phase, Request, SamplingParams
 from repro.traces.generators import TraceConfig, Turn, workload_sessions
@@ -78,6 +103,10 @@ def replay_model_config(block_tokens: int = 32) -> ModelConfig:
 # agentic 168 distinct blocks at 12 sessions, plus the turns' single-use
 # output blocks) exceeds the hot set and the eviction policy has
 # decisions to make — cf. REPLAY_HOT_BLOCKS for the block-level replay.
+# Multi-replica runs keep these capacities PER REPLICA: the fleet's
+# aggregate hot capacity grows with n, which is exactly the deployment
+# trade the cluster sweep measures (more aggregate cache, colder slices
+# under naive routing).
 ENGINE_REPLAY_BLOCKS: Dict[str, Tuple[int, int]] = {
     "sharegpt": (48, 72),
     "lmsys": (32, 48),
@@ -112,13 +141,35 @@ class ServingReplayConfig:
     step_overhead_s: float = 1.5e-3
     per_token_s: float = 4e-5
     stall_weight: float = 1.0           # modelled fetch/recompute stall
-    fetch_stall_s: float = 1e-3         # per lower-tier promotion: at paper
-    #                                     scale a block is MBs (not the
-    #                                     reduced model's KBs), so a CXL/
-    #                                     NVMe fetch costs ~1 ms — the
-    #                                     reduced transfer_time under-
-    #                                     states it by the size ratio
+    fetch_stall_model: str = "spec"     # "spec": per-fetch stall derived
+    #                                     from TierSpec.transfer_time at the
+    #                                     TARGET model's block bytes, charged
+    #                                     per demand fetch from each non-hot
+    #                                     tier (async prefetch promotions
+    #                                     overlap compute — not charged).
+    #                                     "fixed": the pre-PR4 flat charge
+    #                                     below, kept as an A/B fallback.
+    target_model: str = "llama-3-70b"   # paper model whose block bytes set
+    #                                     the spec-derived stall
+    fetch_stall_s: float = 1e-3         # "fixed" mode: flat stall per
+    #                                     promotion (the old constant)
     max_steps: int = 50_000
+
+
+@dataclass
+class ClusterReplayConfig(ServingReplayConfig):
+    """Multi-replica replay: ``ServingReplayConfig`` plus fleet shape,
+    routing policy and optional mid-replay membership events."""
+    n_replicas: int = 2
+    routing: str = "affine"             # affine | round_robin | least_loaded
+    ring_salt: str = ""                 # affine: seeds the session→replica
+    #                                     assignment without renaming nodes
+    fail_replica_after_turns: Optional[int] = None   # fail one replica once
+    #                                     this many turns completed fleet-wide
+    fail_replica_name: Optional[str] = None          # victim (default: the
+    #                                     replica with the most live work)
+    add_replica_after_turns: Optional[int] = None    # scale out by one
+    #                                     replica at this completion count
 
 
 @dataclass
@@ -150,6 +201,49 @@ class ServingReplayResult:
 
 
 @dataclass
+class ReplicaReplayStats:
+    """One replica's slice of a cluster replay (hit denominators are
+    the fleet-wide previously-seen ground truth for the requests that
+    COMPLETED on this replica)."""
+    name: str
+    failed: bool                   # replica was killed mid-replay
+    requests_done: int
+    seen_blocks: int
+    hot_hit_blocks: int
+    hit_rate: float                # tier-0/1 hits / seen blocks
+    reuse_rate: float              # any-tier served / seen blocks
+    manager_hit_rate: float        # the replica manager's own hot-hit rate
+    promotions: int
+    demotions: int
+
+
+@dataclass
+class ClusterReplayResult:
+    workload: str
+    policy: str
+    routing: str
+    n_replicas: int                # replicas that ever served traffic
+    fleet_hit_rate: float          # tier-0/1 hits / seen blocks, fleet-wide
+    fleet_reuse_rate: float
+    seen_blocks: int
+    per_replica: List[ReplicaReplayStats]
+    redispatched: int              # failover requeues
+    reprefill_tokens: int          # prompt+generated tokens whose KV died
+    failed_replicas: List[str]
+    requests_done: int
+    sessions: int
+    generated_tokens: int
+    ttft_p50: float                # virtual seconds (includes the failover
+    ttft_p95: float                # re-prefill tax for redispatched turns)
+    tbt_p50: float
+    tbt_p95: float
+    throughput_tok_s: float
+    virtual_time_s: float
+    steps: int                     # fleet iterations
+    wall_s: float
+
+
+@dataclass
 class _TurnSpec:
     session_id: str
     prompt: List[int]
@@ -165,6 +259,8 @@ class _Tracked:
     session: int
     submit_v: float
     seen_blocks: int
+    replica: str = ""
+    redispatches: int = 0
     token_times: List[float] = field(default_factory=list)
     done_v: Optional[float] = None
 
@@ -242,6 +338,62 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
     return ServingEngine(cfg, ecfg)
 
 
+# ---------------------------------------------------------------------------
+# virtual-clock fetch-stall model
+# ---------------------------------------------------------------------------
+class _FetchStallModel:
+    """Per-step virtual-clock stall from one engine's manager deltas.
+
+    ``spec`` mode (default): each demand fetch from a non-hot tier —
+    visible as a ``ManagerStats.tier_hits`` increment on tiers outside
+    ``hot_tiers`` — stalls the clock by that tier's
+    ``TierSpec.transfer_time`` at the *target* model's block bytes
+    (paper-scale MB blocks, not the reduced model's KB blocks).
+    Recompute stalls still charge at ``stall_weight``.  Async prefetch
+    promotions are free: they overlap compute (§IV).
+
+    ``fixed`` mode: the pre-PR4 model — a flat ``fetch_stall_s`` per
+    promotion plus the reduced-size fetch/recompute accounting.
+    """
+
+    def __init__(self, rcfg: ServingReplayConfig, engine: ServingEngine):
+        self.mode = rcfg.fetch_stall_model
+        if self.mode not in ("spec", "fixed"):
+            raise ValueError(
+                f"fetch_stall_model must be 'spec' or 'fixed', "
+                f"got {rcfg.fetch_stall_model!r}")
+        self.fixed_s = rcfg.fetch_stall_s
+        self.weight = rcfg.stall_weight
+        self.hot_tiers = engine.manager.hot_tiers
+        from repro.configs.paper_models import PAPER_MODELS
+        target = PAPER_MODELS[rcfg.target_model]
+        bb = sizing.block_bytes(target)
+        self.target_block_bytes = bb
+        self.tier_stall_s = {t.spec.tier_id: t.spec.transfer_time(bb)
+                             for t in engine.manager.hierarchy.tiers}
+
+    def snapshot(self, engine: ServingEngine) -> tuple:
+        st = engine.manager.stats
+        return (st.fetch_time, st.recompute_time, st.promotions,
+                dict(st.tier_hits))
+
+    def charge(self, engine: ServingEngine, snap: tuple) -> float:
+        f0, r0, p0, th0 = snap
+        st = engine.manager.stats
+        if self.mode == "fixed":
+            return (self.fixed_s * (st.promotions - p0)
+                    + self.weight * ((st.fetch_time - f0)
+                                     + (st.recompute_time - r0)))
+        stall = self.weight * (st.recompute_time - r0)
+        for tier, n in st.tier_hits.items():
+            if tier in self.hot_tiers:
+                continue
+            d = n - th0.get(tier, 0)
+            if d > 0:
+                stall += d * self.tier_stall_s[tier]
+        return stall
+
+
 def _percentile(vals: Sequence[float], p: float) -> float:
     vals = sorted(vals)
     if not vals:
@@ -249,15 +401,29 @@ def _percentile(vals: Sequence[float], p: float) -> float:
     return vals[min(len(vals) - 1, int(p * len(vals)))]
 
 
-def run_serving_replay(rcfg: ServingReplayConfig,
-                       turn_log: Optional[List[dict]] = None
-                       ) -> ServingReplayResult:
-    """Replay one workload x policy through the live engine.
+# ---------------------------------------------------------------------------
+# the shared replay loop (single engine == 1-replica cluster)
+# ---------------------------------------------------------------------------
+@dataclass
+class _ReplayCore:
+    cluster: ReplicaCluster
+    tracked: Dict[int, _Tracked]
+    seen_total: int
+    virtual_time: float
+    steps: int
+    wall_s: float
+    sessions: int
 
-    ``turn_log`` (optional) receives one dict per submitted turn
-    (session, turn index, request id, virtual submit time) — the
-    determinism / ordering tests assert on it.
-    """
+
+def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
+                     routing: str = "affine", ring_salt: str = "",
+                     fail_after: Optional[int] = None,
+                     fail_name: Optional[str] = None,
+                     add_after: Optional[int] = None,
+                     turn_log: Optional[List[dict]] = None) -> _ReplayCore:
+    """Drive one workload x policy through ``n_replicas`` live engines
+    under the shared virtual clock; the single-engine replay is exactly
+    the 1-replica case."""
     cfg = replay_model_config(rcfg.block_tokens)
     bt = sizing.block_tokens(cfg)
     sessions = workload_sessions(
@@ -271,7 +437,13 @@ def run_serving_replay(rcfg: ServingReplayConfig,
     max_prompt = max(len(t.prompt) for s in specs for t in s)
     max_len = max_prompt + rcfg.max_new_cap + 2
     max_len = -(-max_len // rcfg.page_tokens) * rcfg.page_tokens
-    eng = build_engine(rcfg, cfg, max_len=max_len)
+    router = make_router(routing, salt=ring_salt) \
+        if routing == "affine" else make_router(routing)
+    cluster = ReplicaCluster(
+        engine_factory=lambda: build_engine(rcfg, cfg, max_len=max_len),
+        n_replicas=n_replicas, router=router)
+    stall = _FetchStallModel(rcfg,
+                             next(iter(cluster.engines.values())))
 
     n_sess = len(specs)
     next_turn = [0] * n_sess
@@ -282,12 +454,14 @@ def run_serving_replay(rcfg: ServingReplayConfig,
     vt = 0.0
     t_wall = time.time()
     steps = 0
+    done_count = 0
+    failed_once = False
+    added_once = False
 
     def pending(i: int) -> bool:
         return next_turn[i] < len(specs[i])
 
-    while any(pending(i) for i in range(n_sess)) \
-            or eng.scheduler.has_work():
+    while any(pending(i) for i in range(n_sess)) or cluster.has_work():
         # open-loop submission: every session whose next turn is due
         for i in range(n_sess):
             if not pending(i) or in_flight[i] is not None \
@@ -296,7 +470,8 @@ def run_serving_replay(rcfg: ServingReplayConfig,
             spec = specs[i][next_turn[i]]
             n_seen = sum(1 for c in spec.acct_cids if c in seen)
             seen.update(spec.acct_cids)
-            req = eng.submit(
+            target = cluster.route(spec.session_id)
+            req = cluster.engines[target].submit(
                 spec.prompt,
                 params=SamplingParams(max_new_tokens=spec.max_new),
                 session_id=spec.session_id,
@@ -304,25 +479,32 @@ def run_serving_replay(rcfg: ServingReplayConfig,
                 tool=spec.tool,
                 retain_blocks=next_turn[i] + 1 < len(specs[i]))
             tracked[req.request_id] = _Tracked(
-                req=req, session=i, submit_v=vt, seen_blocks=n_seen)
+                req=req, session=i, submit_v=vt, seen_blocks=n_seen,
+                replica=target)
             in_flight[i] = req.request_id
             if turn_log is not None:
                 turn_log.append({"session": spec.session_id,
                                  "turn": next_turn[i],
                                  "request_id": req.request_id,
                                  "submit_v": vt,
-                                 "prompt_len": len(spec.prompt)})
+                                 "prompt_len": len(spec.prompt),
+                                 "replica": target})
             next_turn[i] += 1
-        if eng.scheduler.has_work():
-            st = eng.manager.stats
-            f0, r0, p0 = st.fetch_time, st.recompute_time, st.promotions
-            produced = eng.step()
+        busy = cluster.busy()
+        if busy:
+            # every busy replica steps once; replicas run concurrently,
+            # so the fleet clock advances by the slowest replica's step
+            dt_max = 0.0
+            for name, eng in busy:
+                snap = stall.snapshot(eng)
+                produced = eng.step()
+                step_tokens = eng.last_step_prefill_tokens + produced
+                dt = (rcfg.step_overhead_s
+                      + rcfg.per_token_s * step_tokens
+                      + stall.charge(eng, snap))
+                dt_max = max(dt_max, dt)
+            vt += dt_max
             steps += 1
-            step_tokens = eng.last_step_prefill_tokens + produced
-            vt += (rcfg.step_overhead_s + rcfg.per_token_s * step_tokens
-                   + rcfg.fetch_stall_s * (st.promotions - p0)
-                   + rcfg.stall_weight * ((st.fetch_time - f0)
-                                          + (st.recompute_time - r0)))
             # per-token virtual timestamps (decode emits <=1/step/request)
             for t in tracked.values():
                 if t.done_v is not None:
@@ -331,6 +513,7 @@ def run_serving_replay(rcfg: ServingReplayConfig,
                     t.token_times.append(vt)
                 if t.req.phase is Phase.DONE:
                     t.done_v = vt
+                    done_count += 1
                     in_flight[t.session] = None
                     ready_v[t.session] = vt + rcfg.think_time_s
         else:
@@ -338,19 +521,77 @@ def run_serving_replay(rcfg: ServingReplayConfig,
             nxt = min((ready_v[i] for i in range(n_sess) if pending(i)),
                       default=vt)
             vt = max(vt, nxt)
+        # mid-replay membership events (fleet-completion triggered)
+        if (fail_after is not None and not failed_once
+                and done_count >= fail_after and cluster.n_replicas > 1):
+            failed_once = True
+            if fail_name is not None:
+                victim = fail_name
+            else:
+                # default victim: the replica with the most live work
+                # (ties by name) — failing an idle replica would make
+                # the failover tax trivially zero
+                victim = max(
+                    sorted(cluster.engines),
+                    key=lambda n:
+                        cluster.engines[n].scheduler.live_count())
+            n_lost = cluster.fail_replica(victim)
+            for rid, _frm, to in cluster.redispatch_log[-n_lost:]:
+                t = tracked[rid]
+                # generation restarts on the successor: drop the stale
+                # token timestamps but keep submit_v, so TTFT carries
+                # the full failover re-prefill tax
+                t.token_times.clear()
+                t.replica = to
+                t.redispatches += 1
+        if (add_after is not None and not added_once
+                and done_count >= add_after):
+            added_once = True
+            cluster.add_replica()
         if steps >= rcfg.max_steps:
             break
-    eng.shutdown()
+    cluster.shutdown()
 
     done = [t for t in tracked.values() if t.done_v is not None]
-    seen_total = sum(t.seen_blocks for t in done)
-    hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
-    served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
+    return _ReplayCore(cluster=cluster, tracked=tracked,
+                       seen_total=sum(t.seen_blocks for t in done),
+                       virtual_time=vt, steps=steps,
+                       wall_s=time.time() - t_wall, sessions=n_sess)
+
+
+def _latency_rollup(core: _ReplayCore) -> dict:
+    done = [t for t in core.tracked.values() if t.done_v is not None]
     ttfts = [t.token_times[0] - t.submit_v for t in done if t.token_times]
     tbts = [b - a for t in done
             for a, b in zip(t.token_times, t.token_times[1:])]
     gen = sum(len(t.req.generated) for t in done)
+    vt = core.virtual_time
+    return dict(
+        requests_done=len(done), generated_tokens=gen,
+        ttft_p50=_percentile(ttfts, 0.50), ttft_p95=_percentile(ttfts, 0.95),
+        tbt_p50=_percentile(tbts, 0.50), tbt_p95=_percentile(tbts, 0.95),
+        throughput_tok_s=gen / vt if vt > 0 else 0.0,
+        virtual_time_s=vt, steps=core.steps, wall_s=core.wall_s)
+
+
+def run_serving_replay(rcfg: ServingReplayConfig,
+                       turn_log: Optional[List[dict]] = None
+                       ) -> ServingReplayResult:
+    """Replay one workload x policy through one live engine (the
+    1-replica case of the shared loop).
+
+    ``turn_log`` (optional) receives one dict per submitted turn
+    (session, turn index, request id, virtual submit time, replica) —
+    the determinism / ordering tests assert on it.
+    """
+    core = _run_replay_core(rcfg, n_replicas=1, turn_log=turn_log)
+    eng = next(iter(core.cluster.engines.values()))
+    done = [t for t in core.tracked.values() if t.done_v is not None]
+    seen_total = core.seen_total
+    hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
+    served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
     mst = eng.manager.stats
+    lat = _latency_rollup(core)
     return ServingReplayResult(
         workload=rcfg.workload, policy=rcfg.policy,
         engine_hit_rate=hot / seen_total if seen_total else 0.0,
@@ -361,12 +602,59 @@ def run_serving_replay(rcfg: ServingReplayConfig,
         hot_hits_t0=mst.hot_hits_t0, hot_hits_t1=mst.hot_hits_t1,
         cow_share_hits=eng.cow_share_hits, inject_hits=eng.inject_hits,
         promotions=mst.promotions, demotions=mst.demotions,
-        requests_done=len(done), sessions=n_sess,
-        generated_tokens=gen,
-        ttft_p50=_percentile(ttfts, 0.50), ttft_p95=_percentile(ttfts, 0.95),
-        tbt_p50=_percentile(tbts, 0.50), tbt_p95=_percentile(tbts, 0.95),
-        throughput_tok_s=gen / vt if vt > 0 else 0.0,
-        virtual_time_s=vt, steps=steps, wall_s=time.time() - t_wall)
+        sessions=core.sessions, **lat)
+
+
+def run_cluster_replay(rcfg: ClusterReplayConfig,
+                       turn_log: Optional[List[dict]] = None
+                       ) -> ClusterReplayResult:
+    """Replay one workload x policy through an ``n_replicas`` cluster
+    under the configured routing policy (plus optional mid-replay
+    ``fail_replica`` / ``add_replica`` events); reports per-replica and
+    fleet-level hit rates against the fleet-wide previously-seen ground
+    truth, plus the failover redispatch / re-prefill tax."""
+    core = _run_replay_core(
+        rcfg, n_replicas=rcfg.n_replicas, routing=rcfg.routing,
+        ring_salt=rcfg.ring_salt,
+        fail_after=rcfg.fail_replica_after_turns,
+        fail_name=rcfg.fail_replica_name,
+        add_after=rcfg.add_replica_after_turns,
+        turn_log=turn_log)
+    cluster = core.cluster
+    done = [t for t in core.tracked.values() if t.done_v is not None]
+    seen_total = core.seen_total
+    hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
+    served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
+
+    per_replica: List[ReplicaReplayStats] = []
+    mgr_stats = cluster.manager_stats()
+    names = sorted(mgr_stats)
+    for name in names:
+        mine = [t for t in done if t.replica == name]
+        s_seen = sum(t.seen_blocks for t in mine)
+        s_hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in mine)
+        s_served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks)
+                       for t in mine)
+        ms = mgr_stats[name]
+        per_replica.append(ReplicaReplayStats(
+            name=name, failed=name in cluster.failed_stats,
+            requests_done=len(mine), seen_blocks=s_seen,
+            hot_hit_blocks=s_hot,
+            hit_rate=s_hot / s_seen if s_seen else 0.0,
+            reuse_rate=s_served / s_seen if s_seen else 0.0,
+            manager_hit_rate=ms.hit_rate,
+            promotions=ms.promotions, demotions=ms.demotions))
+    lat = _latency_rollup(core)
+    return ClusterReplayResult(
+        workload=rcfg.workload, policy=rcfg.policy, routing=rcfg.routing,
+        n_replicas=len(names),
+        fleet_hit_rate=hot / seen_total if seen_total else 0.0,
+        fleet_reuse_rate=served / seen_total if seen_total else 0.0,
+        seen_blocks=seen_total, per_replica=per_replica,
+        redispatched=cluster.redispatched,
+        reprefill_tokens=cluster.reprefill_tokens,
+        failed_replicas=sorted(cluster.failed_stats),
+        sessions=core.sessions, **lat)
 
 
 def run_replay_serving_table(
@@ -383,4 +671,26 @@ def run_replay_serving_table(
             out.append(run_serving_replay(ServingReplayConfig(
                 workload=wl, policy=policy, n_sessions=n_sessions,
                 seed=seed, max_turns=max_turns)))
+    return out
+
+
+def run_cluster_table(
+        workload: str = "lmsys", policy: str = "bayesian", *,
+        n_replicas: Sequence[int] = (1, 2, 4),
+        routings: Sequence[str] = ("affine", "round_robin"),
+        n_sessions: int = 12, seed: int = 0, max_turns: int = 6,
+        ) -> List[ClusterReplayResult]:
+    """The fleet-level sweep behind ``benchmarks/run.py --table
+    cluster``: ``n_replicas x routing_policy`` on one workload.  The
+    headline question: does session-affine routing recover the
+    single-engine hit rate that session-blind routing fragments?"""
+    out = []
+    for n in n_replicas:
+        for routing in routings:
+            if n == 1 and routing != "affine":
+                continue            # routing is moot on one replica
+            out.append(run_cluster_replay(ClusterReplayConfig(
+                workload=workload, policy=policy, n_sessions=n_sessions,
+                seed=seed, max_turns=max_turns, n_replicas=n,
+                routing=routing)))
     return out

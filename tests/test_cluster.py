@@ -1,0 +1,210 @@
+"""Cluster layer (serving/cluster.py): routing-policy determinism,
+failover redispatch + accounting reset + resource release, elastic
+scale-out remapping, and the fleet-level replay claim — session-affine
+routing beats session-blind routing on cross-turn hit rate."""
+import numpy as np
+import pytest
+
+from repro.config import reduce_config
+from repro.configs import get_config
+from repro.serving import EngineConfig, SamplingParams
+from repro.serving.cluster import (LeastLoadedRouter, ReplicaCluster,
+                                   RoundRobinRouter, SessionAffinityRouter,
+                                   make_router)
+from repro.serving.request import Phase
+
+
+def _cluster(n_replicas=2, routing="affine", **ecfg_kw):
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    ecfg = EngineConfig(max_len=128, kv_budget_bytes=16e6, **ecfg_kw)
+    return ReplicaCluster(cfg, ecfg, n_replicas=n_replicas, routing=routing)
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+def test_affinity_deterministic_under_fixed_ring_seed():
+    """Same replicas + same ring salt => identical session→replica map
+    across router instances; a different salt reshuffles it."""
+    keys = [f"s{i}" for i in range(64)]
+
+    def build(salt):
+        r = SessionAffinityRouter(salt=salt)
+        for n in ("replica0", "replica1", "replica2"):
+            r.add_replica(n)
+        return r
+
+    a, b = build("seed0"), build("seed0")
+    map_a = {k: a.route(k) for k in keys}
+    assert map_a == {k: b.route(k) for k in keys}
+    # repeated lookups are stable (affinity, not load balancing)
+    assert map_a == {k: a.route(k) for k in keys}
+    # all replicas get traffic and a different salt moves some sessions
+    assert len(set(map_a.values())) == 3
+    c = build("seed1")
+    assert any(c.route(k) != map_a[k] for k in keys)
+
+
+def test_round_robin_spreads_and_ignores_sessions():
+    r = RoundRobinRouter()
+    for n in ("replica0", "replica1"):
+        r.add_replica(n)
+    # same session key alternates replicas: deliberately session-blind
+    routes = [r.route("s0") for _ in range(4)]
+    assert routes == ["replica0", "replica1", "replica0", "replica1"]
+
+
+def test_least_loaded_picks_min(monkeypatch):
+    r = LeastLoadedRouter()
+    for n in ("replica0", "replica1"):
+        r.add_replica(n)
+    monkeypatch.setattr(LeastLoadedRouter, "_load",
+                        staticmethod(lambda eng: eng))
+    assert r.route("k", {"replica0": 3, "replica1": 1}) == "replica1"
+    # ties break by name
+    assert r.route("k", {"replica0": 2, "replica1": 2}) == "replica0"
+
+
+def test_make_router_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_router("random")
+
+
+# ---------------------------------------------------------------------------
+# elastic scale-out
+# ---------------------------------------------------------------------------
+def test_add_replica_remaps_about_one_over_n():
+    """Consistent hashing: a 5th replica takes ~1/5 of the session
+    space; everything else stays put (no full reshuffle)."""
+    r = SessionAffinityRouter()
+    for i in range(4):
+        r.add_replica(f"replica{i}")
+    keys = [f"s{i}" for i in range(400)]
+    before = {k: r.route(k) for k in keys}
+    r.add_replica("replica4")
+    after = {k: r.route(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # every moved key moved TO the new replica (nothing reshuffles
+    # between surviving replicas)
+    assert all(after[k] == "replica4" for k in moved)
+    assert 0.05 <= len(moved) / len(keys) <= 0.45   # ~1/5 expected
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+def test_failover_redispatches_each_request_once_with_reset():
+    cluster = _cluster(n_replicas=2)
+    rng = np.random.default_rng(0)
+    reqs = [cluster.submit([int(t) for t in rng.integers(0, 250, size=48)],
+                           session_id=f"s{i}",
+                           params=SamplingParams(max_new_tokens=3))
+            for i in range(6)]
+    cluster.step()                     # some requests are mid-generation
+    victim = sorted(cluster.engines)[0]
+    victim_eng = cluster.engines[victim]
+    lost = ([r.request_id for r in victim_eng.scheduler.waiting]
+            + list(victim_eng.scheduler.running)
+            + [r.request_id for r in victim_eng.scheduler.preempted]
+            + list(victim_eng.scheduler.blocked))
+    n_lost = cluster.fail_replica(victim)
+    assert n_lost == len(lost) and n_lost > 0
+    assert cluster.redispatched == n_lost
+    # each lost request redispatched exactly once, with generation
+    # restarted and dead-engine accounting wiped
+    redispatched_ids = [rid for rid, _f, _t in cluster.redispatch_log]
+    assert sorted(redispatched_ids) == sorted(lost)
+    survivor = cluster.engines[sorted(cluster.engines)[0]]
+    queued = [r.request_id for r in survivor.scheduler.waiting]
+    for rid in lost:
+        assert queued.count(rid) == 1
+    by_id = {r.request_id: r for r in reqs}
+    for rid in lost:
+        req = by_id[rid]
+        assert req.phase is Phase.WAITING
+        assert req.generated == [] and req.slot == -1
+        assert req.block_ids == []
+        assert req.prefix_hit_blocks == 0 and req.hot_hit_blocks == 0
+        assert req.prefill_tokens is None and req.prefill_pos == 0
+        assert req.t_first_token is None
+    # the dead replica's manager/tier registrations are released, not
+    # leaked; its ManagerStats survive for fleet aggregation
+    assert victim_eng.manager.metas == {}
+    assert victim_eng.manager._payloads == {}
+    assert all(t.used == 0 for t in victim_eng.manager.hierarchy.tiers)
+    assert victim_eng.worker is None
+    assert victim in cluster.manager_stats()
+    # the fleet completes every request on the survivor
+    stats = cluster.run()
+    assert stats["done"] == 6
+    assert all(len(r.generated) == 3 for r in reqs)
+    assert stats["redispatched"] == n_lost
+    assert stats["reprefill_tokens"] > 0
+    cluster.shutdown()
+
+
+def test_fail_last_replica_refused_without_damage():
+    cluster = _cluster(n_replicas=1)
+    with pytest.raises(RuntimeError):
+        cluster.fail_replica(sorted(cluster.engines)[0])
+    # the refusal must not have mutated anything: the cluster still
+    # routes and serves
+    assert cluster.n_replicas == 1
+    req = cluster.submit([1, 2, 3, 4], session_id="s0",
+                         params=SamplingParams(max_new_tokens=1))
+    cluster.run()
+    assert len(req.generated) == 1
+    cluster.shutdown()
+
+
+def test_failed_replica_name_stays_reserved():
+    cluster = _cluster(n_replicas=2)
+    victim = sorted(cluster.engines)[0]
+    cluster.fail_replica(victim)
+    # reusing the dead name would collide the stats rollups
+    with pytest.raises(ValueError):
+        cluster.add_replica(victim)
+    fresh = cluster.add_replica()
+    assert fresh not in (victim,)
+    assert victim in cluster.manager_stats()
+    assert victim not in cluster.manager_stats(include_failed=False)
+    cluster.shutdown()
+
+
+def test_fleet_manager_stats_sum_replicas():
+    cluster = _cluster(n_replicas=2, routing="round_robin")
+    rng = np.random.default_rng(1)
+    prompt = [int(t) for t in rng.integers(0, 250, size=40)]
+    for i in range(4):
+        cluster.submit(list(prompt), session_id=f"s{i}",
+                       params=SamplingParams(max_new_tokens=2))
+    cluster.run()
+    per = cluster.manager_stats()
+    fleet = cluster.fleet_manager_stats()
+    assert fleet.accesses == sum(m.accesses for m in per.values())
+    assert fleet.hot_hits == sum(m.hot_hits for m in per.values())
+    assert fleet.hot_hits_t0 + fleet.hot_hits_t1 == fleet.hot_hits
+    stats = cluster.stats()
+    assert stats["done"] == 4
+    assert stats["fleet"]["accesses"] == fleet.accesses
+    cluster.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# the fleet-level replay claim (paper: affinity keeps prefix caches warm)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_affine_beats_round_robin_on_lmsys():
+    """Session-affine routing must measurably beat round-robin on the
+    LMSYS trace at 2 replicas: round-robin alternates a session's turns
+    across replica-private caches, so cross-turn prefix reuse
+    fragments."""
+    from repro.traces.serving_replay import (ClusterReplayConfig,
+                                             run_cluster_replay)
+    kw = dict(workload="lmsys", policy="bayesian", n_sessions=8,
+              max_turns=4, n_replicas=2)
+    aff = run_cluster_replay(ClusterReplayConfig(routing="affine", **kw))
+    rr = run_cluster_replay(ClusterReplayConfig(routing="round_robin", **kw))
+    assert aff.seen_blocks == rr.seen_blocks       # same trace ground truth
+    assert aff.fleet_hit_rate >= rr.fleet_hit_rate + 0.05
+    assert aff.redispatched == rr.redispatched == 0

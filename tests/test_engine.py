@@ -7,6 +7,8 @@ import pytest
 
 from repro.config import reduce_config
 from repro.configs import get_config
+# the pre-promotion import location must keep working (launch/serve.py
+# re-exports from serving/cluster.py)
 from repro.launch.serve import ReplicaCluster
 from repro.serving import EngineConfig, SamplingParams, ServingEngine
 
