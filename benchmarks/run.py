@@ -217,7 +217,7 @@ def table_ix(fast: bool = False) -> None:
          round(100 * (max(c_rates) - min(c_rates)) / base, 2), "<3")
 
 
-def replay_benchmark(fast: bool = False) -> None:
+def replay_benchmark(fast: bool = False, backend: str = None) -> None:
     """Table V at the serving layer: the ShareGPT / LMSYS / agentic
     session traces replayed end-to-end through the live ``ServingEngine``
     (paged pool, CoW prefix sharing, chunked prefill, async tier
@@ -232,11 +232,14 @@ def replay_benchmark(fast: bool = False) -> None:
     block sizes — the serving-layer coupling between hit rate and
     latency that block-level replay cannot show.
     """
+    from repro.kernels.backend import resolve_backend
     from repro.traces.serving_replay import run_replay_serving_table
     print("# Table V (serving) — live-engine trace replay"
-          + (" [fast]" if fast else ""))
+          + (" [fast]" if fast else "")
+          + f" [kernel backend: {resolve_backend(backend)}]")
     rows = run_replay_serving_table(
-        n_sessions=6 if fast else 12, max_turns=4 if fast else 6)
+        n_sessions=6 if fast else 12, max_turns=4 if fast else 6,
+        kernel_backend=backend)
     for r in rows:
         exp = PAPER["table5"][r.workload]
         idx = {"lru": 0, "ema": 1, "bayesian": 2}[r.policy]
@@ -257,7 +260,7 @@ def replay_benchmark(fast: bool = False) -> None:
         _row(f"{key}.wall_s", round(r.wall_s, 1))
 
 
-def cluster_benchmark(fast: bool = False) -> None:
+def cluster_benchmark(fast: bool = False, backend: str = None) -> None:
     """Fleet-level trace replay: the LMSYS trace through a multi-replica
     ``ReplicaCluster`` (``serving/cluster.py``), sweeping ``n_replicas x
     routing_policy`` under the shared virtual clock, plus one failover
@@ -271,16 +274,19 @@ def cluster_benchmark(fast: bool = False) -> None:
     affine must beat round-robin on fleet hit rate.  See
     ``docs/SERVING.md`` for the full column glossary.
     """
+    from repro.kernels.backend import resolve_backend
     from repro.traces.serving_replay import (ClusterReplayConfig,
                                              run_cluster_replay,
                                              run_cluster_table)
     print("# Cluster — multi-replica LMSYS replay, n_replicas x routing"
-          + (" [fast]" if fast else ""))
+          + (" [fast]" if fast else "")
+          + f" [kernel backend: {resolve_backend(backend)}]")
     n_sessions = 6 if fast else 12
     max_turns = 4 if fast else 6
     exp = PAPER["table5"]["lmsys"][2]      # Table V lmsys bayesian
     rows = run_cluster_table(n_replicas=(1, 2) if fast else (1, 2, 4),
-                             n_sessions=n_sessions, max_turns=max_turns)
+                             n_sessions=n_sessions, max_turns=max_turns,
+                             kernel_backend=backend)
     for r in rows:
         key = f"cluster.lmsys.n{r.n_replicas}.{r.routing}"
         _row(f"{key}.fleet_hit_pct", round(100 * r.fleet_hit_rate, 1), exp)
@@ -300,7 +306,8 @@ def cluster_benchmark(fast: bool = False) -> None:
     f = run_cluster_replay(ClusterReplayConfig(
         workload="lmsys", policy="bayesian", n_sessions=n_sessions,
         max_turns=max_turns, n_replicas=2, routing="affine",
-        fail_replica_after_turns=max(2, n_sessions // 2)))
+        fail_replica_after_turns=max(2, n_sessions // 2),
+        kernel_backend=backend))
     key = "cluster.lmsys.failover.n2.affine"
     _row(f"{key}.fleet_hit_pct", round(100 * f.fleet_hit_rate, 1))
     _row(f"{key}.redispatched", f.redispatched)
@@ -341,9 +348,12 @@ def micro_benchmarks() -> None:
     _row("micro.bayes_query_us", round(us, 2), "O(1)")
 
 
-def serving_benchmark(paged: bool, fast: bool = False) -> None:
+def serving_benchmark(paged: bool, fast: bool = False,
+                      backend: str = None) -> None:
     """Live-engine throughput through the paged block-table KV path
-    (``--paged``, default) or the dense slot fallback (``--no-paged``).
+    (``--paged``, default) or the dense slot fallback (``--no-paged``),
+    under the selected kernel backend (``--backend``; default: compiled
+    xla off-TPU).
 
     The paged rows also report the async tier-transfer worker's stats:
     transfers complete off the step loop, so ``step_blocked_on_transfer``
@@ -354,11 +364,16 @@ def serving_benchmark(paged: bool, fast: bool = False) -> None:
     from repro.configs import get_config
     from repro.serving import EngineConfig, SamplingParams, ServingEngine
     mode = "paged" if paged else "dense"
-    print(f"# Serving — {mode} engine A/B (reduced llama3.2-1b)")
     cfg = reduce_config(get_config("llama3.2-1b"))
     eng = ServingEngine(cfg, EngineConfig(max_len=128,
                                           kv_budget_bytes=1e6,
-                                          paged=paged))
+                                          paged=paged,
+                                          kernel_backend=backend))
+    # the dense path never calls the paged ops (plain XLA attention),
+    # so the backend knob only applies to the paged rows
+    be_label = eng.kernel_backend if paged else "n/a (dense path)"
+    print(f"# Serving — {mode} engine A/B (reduced llama3.2-1b, "
+          f"kernel backend: {be_label})")
     rng = np.random.default_rng(0)
     templates = [[int(t) for t in rng.integers(0, 200, size=64)]
                  for _ in range(3)]
@@ -402,6 +417,7 @@ def serving_benchmark(paged: bool, fast: bool = False) -> None:
     dt = time.perf_counter() - t0
     stats = eng.stats()
     sch = stats["scheduler"]
+    _row(f"serving.{mode}.kernel_backend", be_label)
     _row(f"serving.{mode}.done", sch["done"])
     _row(f"serving.{mode}.steps", stats["steps"])
     _row(f"serving.{mode}.tok_per_s",
@@ -435,7 +451,8 @@ def serving_benchmark(paged: bool, fast: bool = False) -> None:
     eng.shutdown()
 
 
-def ttft_benchmark(chunked: bool, fast: bool = False) -> None:
+def ttft_benchmark(chunked: bool, fast: bool = False,
+                   backend: str = None) -> None:
     """TTFT under mixed load: short decode streams with long prompts
     arriving mid-stream, chunked vs monolithic prefill (``--chunked`` /
     ``--no-chunked`` A/B).
@@ -452,12 +469,14 @@ def ttft_benchmark(chunked: bool, fast: bool = False) -> None:
     from repro.configs import get_config
     from repro.serving import EngineConfig, SamplingParams, ServingEngine
     mode = "chunked" if chunked else "monolithic"
-    print(f"# TTFT A/B — {mode} prefill, short decodes + mid-stream "
-          f"long prompts (reduced llama3.2-1b)")
     cfg = reduce_config(get_config("llama3.2-1b"))
     eng = ServingEngine(cfg, EngineConfig(
         max_len=640, kv_budget_bytes=2.5e6, max_step_tokens=96,
-        prefill_chunk_tokens=32, chunked_prefill=chunked))
+        prefill_chunk_tokens=32, chunked_prefill=chunked,
+        kernel_backend=backend))
+    print(f"# TTFT A/B — {mode} prefill, short decodes + mid-stream "
+          f"long prompts (reduced llama3.2-1b, kernel backend: "
+          f"{eng.kernel_backend})")
     rng = np.random.default_rng(0)
 
     def _prompt(n):
@@ -510,21 +529,96 @@ def ttft_benchmark(chunked: bool, fast: bool = False) -> None:
     eng.shutdown()
 
 
-def kernel_benchmarks() -> None:
-    """Interpret-mode allclose spot checks (full sweeps in tests/)."""
+def kernel_benchmarks(backend: str = None, fast: bool = False) -> None:
+    """Per-op kernel-backend microbenchmark (``--table kernels``).
+
+    Times every paged op under each available backend — ``xla``
+    (compiled jnp gathers, the off-TPU serving default) vs ``interpret``
+    (the Pallas interpreter, the old off-TPU path) and ``pallas`` when
+    running on a TPU — across decode/prefill x GQA/MQA/MLA shapes, so a
+    backend regression is measurable in isolation from the engine.
+    Also prints the xla-vs-oracle allclose gate per op (full sweeps in
+    ``tests/test_xla_backend.py``).
+    """
+    import jax
     import jax.numpy as jnp
     from repro.kernels import ops
-    print("# Kernels — interpret-mode allclose vs oracles")
+    from repro.kernels.backend import on_tpu
+
+    backends = [backend] if backend else (
+        ["xla", "interpret"] + (["pallas"] if on_tpu() else []))
+    print(f"# Kernels — per-op latency by backend ({'/'.join(backends)}) "
+          "+ xla-vs-oracle allclose")
     rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
-    kp = jnp.asarray(rng.normal(size=(10, 64, 2, 64)), jnp.float32)
-    vp = jnp.asarray(rng.normal(size=(10, 64, 2, 64)), jnp.float32)
-    bt = jnp.asarray(rng.permutation(10)[:8].reshape(2, 4), jnp.int32)
-    ln = jnp.asarray([256, 100], jnp.int32)
-    err = float(jnp.max(jnp.abs(
-        ops.paged_decode(q, kp, vp, bt, ln, interpret=True)
-        - ops.paged_decode_ref(q, kp, vp, bt, ln))))
-    _row("kernel.paged_decode.max_err", f"{err:.2e}", "<1e-5")
+
+    def arr(shape):
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+    def table(b, pages, n):
+        return jnp.asarray(
+            rng.permutation(n)[:b * pages].reshape(b, pages), jnp.int32)
+
+    # decode: one query per request over 4 pages x 64 tokens
+    b, page, pages, hd = 4, 64, 4, 64
+    n = b * pages + 2
+    cases = []
+    for name, hq, hkv in (("decode_gqa", 8, 2), ("decode_mha", 4, 4),
+                          ("decode_mqa", 8, 1)):
+        q, kp, vp = arr((b, hq, hd)), arr((n, page, hkv, hd)), \
+            arr((n, page, hkv, hd))
+        bt = table(b, pages, n)
+        ln = jnp.asarray(rng.integers(page, pages * page, size=b), jnp.int32)
+        cases.append((name,
+                      lambda be, q=q, kp=kp, vp=vp, bt=bt, ln=ln:
+                      ops.paged_decode(q, kp, vp, bt, ln, backend=be),
+                      lambda q=q, kp=kp, vp=vp, bt=bt, ln=ln:
+                      ops.paged_decode_ref(q, kp, vp, bt, ln)))
+    dl, dr = 64, 16
+    ql, qr = arr((b, 8, dl)), arr((b, 8, dr))
+    lat = arr((n, page, dl + dr))
+    bt = table(b, pages, n)
+    ln = jnp.asarray(rng.integers(page, pages * page, size=b), jnp.int32)
+    cases.append(("decode_mla",
+                  lambda be: ops.mla_decode(ql, qr, lat, bt, ln,
+                                            d_latent=dl, backend=be),
+                  lambda: ops.mla_decode_ref(ql, qr, lat, bt, ln, dl)))
+    # prefill: a 64-token chunk over 3 resident pages
+    c, ppages = 64, 3
+    np_ = 2 * ppages + 2
+    pq, pkc, pvc = arr((2, c, 8, hd)), arr((2, c, 2, hd)), arr((2, c, 2, hd))
+    pkp, pvp = arr((np_, page, 2, hd)), arr((np_, page, 2, hd))
+    pbt = table(2, ppages, np_)
+    off = jnp.asarray([page * 2 + 11, 0], jnp.int32)
+    cases.append(("prefill_gqa",
+                  lambda be: ops.paged_prefill(pq, pkc, pvc, pkp, pvp,
+                                               pbt, off, backend=be),
+                  lambda: ops.paged_prefill_ref(pq, pkc, pvc, pkp, pvp,
+                                                pbt, off)))
+    mql, mqr = arr((2, c, 8, dl)), arr((2, c, 8, dr))
+    mlc, mlp = arr((2, c, dl + dr)), arr((np_, page, dl + dr))
+    mbt = table(2, ppages, np_)
+    cases.append(("prefill_mla",
+                  lambda be: ops.mla_prefill(mql, mqr, mlc, mlp, mbt, off,
+                                             d_latent=dl, backend=be),
+                  lambda: ops.mla_prefill_ref(mql, mqr, mlc, mlp, mbt,
+                                              off, dl)))
+
+    for name, run, oracle in cases:
+        err = float(jnp.max(jnp.abs(run("xla") - oracle())))
+        _row(f"kernels.{name}.xla_vs_oracle_max_err", f"{err:.2e}", "<1e-4")
+        lat_us = {}
+        for be in backends:
+            jax.block_until_ready(run(be))      # compile / first call
+            iters = (3 if be == "interpret" else 20) * (1 if fast else 2)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = run(be)
+            jax.block_until_ready(out)
+            lat_us[be] = (time.perf_counter() - t0) / iters * 1e6
+            _row(f"kernels.{name}.{be}.us", round(lat_us[be], 1))
+        if "xla" in lat_us and "interpret" in lat_us:
+            _row(f"kernels.{name}.interpret_over_xla",
+                 round(lat_us["interpret"] / lat_us["xla"], 1), ">1")
 
 
 def main() -> None:
@@ -541,6 +635,13 @@ def main() -> None:
                     default=True,
                     help="TTFT benchmark: chunked token-budget prefill "
                          "(--no-chunked = monolithic prefill A/B)")
+    ap.add_argument("--backend", default=None,
+                    choices=("pallas", "interpret", "xla"),
+                    help="kernel backend for the engine-driving tables "
+                         "(serving/ttft/replay/cluster) and the kernels "
+                         "microbench; default resolves via "
+                         "REPRO_KERNEL_BACKEND, else pallas on TPU / "
+                         "xla elsewhere")
     args = ap.parse_args()
     t0 = time.time()
     sel = args.table
@@ -560,23 +661,25 @@ def main() -> None:
     if sel in (None, "micro"):
         micro_benchmarks()
     if sel in (None, "kernels"):
-        kernel_benchmarks()
+        kernel_benchmarks(backend=args.backend, fast=args.fast)
     if sel == "serving":
         # explicit A/B: both modes back to back
-        serving_benchmark(paged=True, fast=args.fast)
-        serving_benchmark(paged=False, fast=args.fast)
+        serving_benchmark(paged=True, fast=args.fast, backend=args.backend)
+        serving_benchmark(paged=False, fast=args.fast, backend=args.backend)
     elif sel is None:
-        serving_benchmark(paged=args.paged, fast=args.fast)
+        serving_benchmark(paged=args.paged, fast=args.fast,
+                          backend=args.backend)
     if sel == "ttft":
         # explicit A/B: both prefill modes back to back
-        ttft_benchmark(chunked=True, fast=args.fast)
-        ttft_benchmark(chunked=False, fast=args.fast)
+        ttft_benchmark(chunked=True, fast=args.fast, backend=args.backend)
+        ttft_benchmark(chunked=False, fast=args.fast, backend=args.backend)
     elif sel is None:
-        ttft_benchmark(chunked=args.chunked, fast=args.fast)
+        ttft_benchmark(chunked=args.chunked, fast=args.fast,
+                       backend=args.backend)
     if sel == "replay":
-        replay_benchmark(fast=args.fast)
+        replay_benchmark(fast=args.fast, backend=args.backend)
     if sel == "cluster":
-        cluster_benchmark(fast=args.fast)
+        cluster_benchmark(fast=args.fast, backend=args.backend)
     print(f"# done in {time.time() - t0:.1f}s")
 
 

@@ -6,8 +6,19 @@ through a 2-replica ReplicaCluster with a mid-replay failover,
 asserting every turn still completes and the redispatch/re-prefill
 accounting is consistent.
 
+The smoke also enforces a wall-clock budget (``REPLAY_SMOKE_BUDGET_S``,
+0/unset disables): under the compiled ``xla`` kernel backend the whole
+script is a few times faster than the old interpret-mode path, and the
+budget catches a silent fall-back to the interpreter (or any comparable
+wall-clock regression) in CI.  A ``smoke summary`` line with the
+resolved backend and per-phase timings is printed for the job log.
+
     PYTHONPATH=src python scripts/replay_smoke.py
 """
+import os
+import time
+
+from repro.kernels.backend import default_backend
 from repro.traces.serving_replay import (ClusterReplayConfig,
                                          ServingReplayConfig,
                                          run_cluster_replay,
@@ -53,8 +64,25 @@ def cluster_smoke() -> None:
 
 
 def main() -> None:
+    budget_s = float(os.environ.get("REPLAY_SMOKE_BUDGET_S", "0"))
+    t0 = time.perf_counter()
     single_engine_smoke()
+    t_single = time.perf_counter() - t0
+    t1 = time.perf_counter()
     cluster_smoke()
+    t_cluster = time.perf_counter() - t1
+    elapsed = time.perf_counter() - t0
+    print(f"smoke summary: kernel_backend={default_backend()} "
+          f"single={t_single:.1f}s cluster={t_cluster:.1f}s "
+          f"total={elapsed:.1f}s "
+          f"budget={budget_s:.0f}s" + (" (disabled)" if not budget_s else ""))
+    # wall-clock budget: ~2x the compiled-backend baseline on a CI
+    # runner — an interpret-mode fallback (or an equivalent wall-clock
+    # regression) blows well past it
+    assert not budget_s or elapsed <= budget_s, (
+        f"replay smoke took {elapsed:.1f}s > budget {budget_s:.0f}s — "
+        f"kernel backend {default_backend()!r}; did the compiled xla "
+        f"fallback regress to interpret mode?")
 
 
 if __name__ == "__main__":

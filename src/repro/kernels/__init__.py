@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Layout: ops.py is the only entry point callers should use — it
+# dispatches each op to a backend resolved by backend.py ("pallas"
+# compiled TPU kernels, "xla" compiled jnp fallbacks in
+# xla_fallback.py, "interpret" Pallas-interpreter debugging);
+# ref.py holds the pure-jnp oracles that every backend is tested
+# against.

@@ -1,0 +1,104 @@
+"""Kernel-backend resolution — the single authority for how the paged
+attention ops execute.
+
+Three backends per op:
+
+* ``pallas``    — the compiled Pallas TPU kernels (MXU path, scalar-
+                  prefetch block tables).  Only meaningful on TPU.
+* ``interpret`` — the same Pallas kernel bodies run by the Python-driven
+                  interpreter grid.  Numerically identical to ``pallas``
+                  and available everywhere, but orders of magnitude
+                  slower — a debugging/validation mode, not a serving
+                  path.
+* ``xla``       — jitted pure-``jax.numpy`` implementations
+                  (``kernels/xla_fallback.py``): batched block-table
+                  gathers plus dense masked softmax attention.  Compiled
+                  on every JAX backend — the off-TPU serving default.
+
+Resolution order: explicit argument > ``REPRO_KERNEL_BACKEND`` env var >
+platform default (``pallas`` on TPU, ``xla`` elsewhere).  Every entry
+point — the ``ops.py`` wrappers, the individual kernel modules' direct
+call paths, ``EngineConfig(kernel_backend=...)`` — routes through this
+module, so a direct kernel call on TPU can never silently run
+interpreted.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+BACKENDS = ("pallas", "interpret", "xla")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU (cached per process —
+    the platform cannot change under a live process)."""
+    return jax.default_backend() == "tpu"
+
+
+def _validated(name: str, source: str) -> str:
+    name = name.strip().lower()
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r} (from {source}); "
+            f"expected one of {BACKENDS}")
+    if name == "pallas" and not on_tpu():
+        # fail at resolution (engine construction / CLI parse) with a
+        # clear message instead of deep inside jit with a Mosaic
+        # lowering error on the first decode step
+        raise ValueError(
+            f"kernel backend 'pallas' (from {source}) requires a TPU "
+            f"(running on {jax.default_backend()!r}); use 'xla' or "
+            f"'interpret' off-TPU")
+    return name
+
+
+def default_backend() -> str:
+    """The process-wide default: ``REPRO_KERNEL_BACKEND`` if set, else
+    ``pallas`` on TPU / ``xla`` everywhere else."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return _validated(env, f"${ENV_VAR}")
+    return "pallas" if on_tpu() else "xla"
+
+
+def resolve_backend(backend: str | None = None,
+                    interpret: bool | None = None) -> str:
+    """Resolve an op call's backend.
+
+    ``backend`` wins when given; the legacy ``interpret`` boolean keeps
+    the pre-dispatch call sites working (True -> ``interpret``, False ->
+    ``pallas``); ``None``/``None`` falls through to
+    :func:`default_backend`.
+    """
+    if backend is not None:
+        return _validated(backend, "backend argument")
+    if interpret is not None:
+        return ("interpret" if interpret
+                else _validated("pallas", "interpret=False argument"))
+    return default_backend()
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Default for the raw Pallas kernel entry points
+    (``paged_decode_attention`` et al., which have no ``xla`` path):
+    interpret off-TPU, compiled on TPU, with an explicit
+    ``REPRO_KERNEL_BACKEND=interpret``/``pallas`` honored on any
+    platform (``xla`` has no meaning for a raw Pallas call and keeps
+    the platform default).  Replaces the per-module ``interpret: bool =
+    True`` hard defaults that could silently run a direct TPU call
+    through the interpreter."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(ENV_VAR)
+    if env:
+        name = _validated(env, f"${ENV_VAR}")
+        if name == "interpret":
+            return True
+        if name == "pallas":      # only resolvable on TPU (_validated)
+            return False
+    return not on_tpu()

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -62,12 +64,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   block_q: int = 128, block_k: int = 128,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Causal attention. q [B,S,Hq,hd], k/v [B,S,Hkv,hd] -> [B,S,Hq,hd].
 
     GQA handled by expanding each query head to its KV head via the head
     grid dimension (k/v blocks indexed at h // group).
     """
+    interpret = resolve_interpret(interpret)
     b, s, hq, hd = q.shape
     hkv = k.shape[2]
     g = hq // hkv

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,7 +68,7 @@ def mla_paged_decode(q_lat: jax.Array, q_rope: jax.Array,
                      latent_pages: jax.Array, block_tables: jax.Array,
                      lengths: jax.Array, *, d_latent: int,
                      head_dim: int = 128, scale: float = None,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """q_lat [B,Hq,dl], q_rope [B,Hq,dr]; latent_pages [N,page,dl+dr];
     -> ctx [B,Hq,dl] (caller applies W_uv + output projection).
 
@@ -75,6 +77,7 @@ def mla_paged_decode(q_lat: jax.Array, q_rope: jax.Array,
     live engine passes 1/sqrt(hd + dr) to match the absorbed-form
     dense decode exactly.
     """
+    interpret = resolve_interpret(interpret)
     b, hq, dl = q_lat.shape
     dr = q_rope.shape[-1]
     n, page, dtot = latent_pages.shape

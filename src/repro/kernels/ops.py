@@ -1,16 +1,27 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Public kernel ops with unified backend dispatch.
 
-``interpret`` defaults to True off-TPU (the kernel bodies execute in
-Python for validation); on TPU backends the compiled MXU path is used.
+Every paged attention op resolves to one of three backends
+(``kernels/backend.py``):
+
+* ``pallas``    — compiled Pallas TPU kernels (the TPU default);
+* ``interpret`` — the same kernel bodies on the Pallas interpreter
+                  (debug/validation — Python-driven grid, slow);
+* ``xla``       — jitted pure-``jax.numpy`` fallbacks
+                  (``kernels/xla_fallback.py``; the off-TPU default).
+
+Selection order: ``backend=`` argument > legacy ``interpret=`` boolean
+(True -> ``interpret``, False -> ``pallas``) > ``REPRO_KERNEL_BACKEND``
+env var > platform default.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, xla_fallback
+from repro.kernels.backend import (BACKENDS, default_backend,  # noqa: F401
+                                   on_tpu, resolve_backend)
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.mla_paged_decode import mla_paged_decode
 from repro.kernels.paged_attention import paged_decode_attention
@@ -18,68 +29,134 @@ from repro.kernels.paged_prefill import (mla_paged_prefill,
                                          paged_prefill_attention)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+# -- jitted Pallas entry points (interpret resolved to a static bool) -------
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode(q, k_pages, v_pages, block_tables, lengths,
-                 interpret: bool | None = None):
-    it = (not _on_tpu()) if interpret is None else interpret
+def _paged_decode_pallas(q, k_pages, v_pages, block_tables, lengths,
+                         interpret: bool):
     return paged_decode_attention(q, k_pages, v_pages, block_tables,
-                                  lengths, interpret=it)
+                                  lengths, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_q",
                                              "block_k"))
-def flash_causal(q, k, v, block_q: int = 128, block_k: int = 128,
-                 interpret: bool | None = None):
-    it = (not _on_tpu()) if interpret is None else interpret
+def _flash_causal_pallas(q, k, v, block_q: int, block_k: int,
+                         interpret: bool):
     return flash_prefill(q, k, v, block_q=block_q, block_k=block_k,
-                         interpret=it)
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("d_latent", "scale",
                                              "interpret"))
-def mla_decode(q_lat, q_rope, latent_pages, block_tables, lengths,
-               d_latent: int, scale: float | None = None,
-               interpret: bool | None = None):
-    it = (not _on_tpu()) if interpret is None else interpret
+def _mla_decode_pallas(q_lat, q_rope, latent_pages, block_tables, lengths,
+                       d_latent: int, scale: float | None, interpret: bool):
     return mla_paged_decode(q_lat, q_rope, latent_pages, block_tables,
                             lengths, d_latent=d_latent, scale=scale,
-                            interpret=it)
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_prefill(q, k_chunk, v_chunk, k_pages, v_pages, block_tables,
-                  offsets, interpret: bool | None = None):
-    """Chunked prefill: full attention to pool tokens < offset (block
-    table indirection) + causal attention within the chunk."""
-    it = (not _on_tpu()) if interpret is None else interpret
+def _paged_prefill_pallas(q, k_chunk, v_chunk, k_pages, v_pages,
+                          block_tables, offsets, interpret: bool):
     return paged_prefill_attention(q, k_chunk, v_chunk, k_pages, v_pages,
-                                   block_tables, offsets, interpret=it)
+                                   block_tables, offsets,
+                                   interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("d_latent", "scale",
                                              "interpret"))
-def mla_prefill(q_lat, q_rope, lat_chunk, latent_pages, block_tables,
-                offsets, d_latent: int, scale: float | None = None,
-                interpret: bool | None = None):
-    """Absorbed-MLA chunked prefill over latent pages."""
-    it = (not _on_tpu()) if interpret is None else interpret
+def _mla_prefill_pallas(q_lat, q_rope, lat_chunk, latent_pages,
+                        block_tables, offsets, d_latent: int,
+                        scale: float | None, interpret: bool):
     return mla_paged_prefill(q_lat, q_rope, lat_chunk, latent_pages,
                              block_tables, offsets, d_latent=d_latent,
-                             scale=scale, interpret=it)
+                             scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
-                      block_tables, lengths, interpret: bool | None = None):
+def _paged_decode_int8_pallas(q, k_pages, v_pages, k_scales, v_scales,
+                              block_tables, lengths, interpret: bool):
     from repro.kernels.paged_attention import paged_decode_attention_int8
-    it = (not _on_tpu()) if interpret is None else interpret
     return paged_decode_attention_int8(q, k_pages, v_pages, k_scales,
                                        v_scales, block_tables, lengths,
-                                       interpret=it)
+                                       interpret=interpret)
+
+
+# -- dispatching public ops -------------------------------------------------
+def paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                 backend: str | None = None, interpret: bool | None = None):
+    """Paged decode attention (GQA/MHA/MQA): q [B,Hq,hd] over block-table
+    -indirected KV pages -> [B,Hq,hd]."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.paged_decode_attention_xla(
+            q, k_pages, v_pages, block_tables, lengths)
+    return _paged_decode_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                interpret=(be == "interpret"))
+
+
+def flash_causal(q, k, v, block_q: int = 128, block_k: int = 128,
+                 backend: str | None = None, interpret: bool | None = None):
+    """Causal prefill attention. q [B,S,Hq,hd], k/v [B,S,Hkv,hd]."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.flash_causal_xla(q, k, v)
+    return _flash_causal_pallas(q, k, v, block_q=block_q, block_k=block_k,
+                                interpret=(be == "interpret"))
+
+
+def mla_decode(q_lat, q_rope, latent_pages, block_tables, lengths,
+               d_latent: int, scale: float | None = None,
+               backend: str | None = None, interpret: bool | None = None):
+    """Absorbed-MLA paged decode over latent pages -> ctx [B,Hq,dl]."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.mla_paged_decode_xla(
+            q_lat, q_rope, latent_pages, block_tables, lengths,
+            d_latent=d_latent, scale=scale)
+    return _mla_decode_pallas(q_lat, q_rope, latent_pages, block_tables,
+                              lengths, d_latent=d_latent, scale=scale,
+                              interpret=(be == "interpret"))
+
+
+def paged_prefill(q, k_chunk, v_chunk, k_pages, v_pages, block_tables,
+                  offsets, backend: str | None = None,
+                  interpret: bool | None = None):
+    """Chunked prefill: full attention to pool tokens < offset (block
+    table indirection) + causal attention within the chunk."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.paged_prefill_attention_xla(
+            q, k_chunk, v_chunk, k_pages, v_pages, block_tables, offsets)
+    return _paged_prefill_pallas(q, k_chunk, v_chunk, k_pages, v_pages,
+                                 block_tables, offsets,
+                                 interpret=(be == "interpret"))
+
+
+def mla_prefill(q_lat, q_rope, lat_chunk, latent_pages, block_tables,
+                offsets, d_latent: int, scale: float | None = None,
+                backend: str | None = None, interpret: bool | None = None):
+    """Absorbed-MLA chunked prefill over latent pages."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.mla_paged_prefill_xla(
+            q_lat, q_rope, lat_chunk, latent_pages, block_tables, offsets,
+            d_latent=d_latent, scale=scale)
+    return _mla_prefill_pallas(q_lat, q_rope, lat_chunk, latent_pages,
+                               block_tables, offsets, d_latent=d_latent,
+                               scale=scale, interpret=(be == "interpret"))
+
+
+def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
+                      block_tables, lengths, backend: str | None = None,
+                      interpret: bool | None = None):
+    """int8-paged decode (per-token-head scales, in-register dequant)."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.paged_decode_attention_int8_xla(
+            q, k_pages, v_pages, k_scales, v_scales, block_tables, lengths)
+    return _paged_decode_int8_pallas(q, k_pages, v_pages, k_scales,
+                                     v_scales, block_tables, lengths,
+                                     interpret=(be == "interpret"))
 
 
 # re-export oracles for test convenience

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 DEFAULT_PAGE = 64
 NEG_INF = -1e30
 
@@ -90,13 +92,16 @@ def _decode_kernel(
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array, *,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """q [B,Hq,hd]; k/v_pages [N,page,Hkv,hd]; block_tables [B,P] int32;
     lengths [B] int32 -> out [B,Hq,hd].
 
-    interpret=True runs the kernel body on CPU (this container); on TPU
-    pass interpret=False for the compiled MXU path.
+    ``interpret`` defaults through ``backend.resolve_interpret``:
+    compiled on TPU, interpreter elsewhere (True forces the Python-grid
+    debug path; the serving-grade off-TPU route is the ``xla`` backend
+    in ``ops.py``).
     """
+    interpret = resolve_interpret(interpret)
     b, hq, hd = q.shape
     n, page, hkv, _ = k_pages.shape
     p_max = block_tables.shape[1]
@@ -189,9 +194,10 @@ def _decode_kernel_int8(
 
 def paged_decode_attention_int8(q, k_pages, v_pages, k_scales, v_scales,
                                 block_tables, lengths, *,
-                                interpret: bool = True):
+                                interpret: bool | None = None):
     """q [B,Hq,hd]; k/v_pages int8 [N,page,Hkv,hd]; scales
     [N,page,Hkv,1]; -> [B,Hq,hd]."""
+    interpret = resolve_interpret(interpret)
     b, hq, hd = q.shape
     n, page, hkv, _ = k_pages.shape
     p_max = block_tables.shape[1]

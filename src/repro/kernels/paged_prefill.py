@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -118,7 +120,7 @@ def paged_prefill_attention(q: jax.Array, k_chunk: jax.Array,
                             v_chunk: jax.Array, k_pages: jax.Array,
                             v_pages: jax.Array, block_tables: jax.Array,
                             offsets: jax.Array, *,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool | None = None) -> jax.Array:
     """q [B,C,Hq,hd]; k/v_chunk [B,C,Hkv,hd]; k/v_pages [N,page,Hkv,hd];
     block_tables [B,P] int32; offsets [B] int32 -> out [B,C,Hq,hd].
 
@@ -128,6 +130,7 @@ def paged_prefill_attention(q: jax.Array, k_chunk: jax.Array,
     pool (it is passed densely) — the caller scatters it afterwards via
     ``PagedKVCache.write_chunk``.
     """
+    interpret = resolve_interpret(interpret)
     b, c, hq, hd = q.shape
     n, page, hkv, _ = k_pages.shape
     p_max = block_tables.shape[1]
@@ -233,10 +236,11 @@ def mla_paged_prefill(q_lat: jax.Array, q_rope: jax.Array,
                       lat_chunk: jax.Array, latent_pages: jax.Array,
                       block_tables: jax.Array, offsets: jax.Array, *,
                       d_latent: int, scale: float = None,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """q_lat [B,C,Hq,dl]; q_rope [B,C,Hq,dr]; lat_chunk [B,C,dl+dr];
     latent_pages [N,page,dl+dr]; -> ctx [B,C,Hq,dl] (caller applies
     W_uv + the output projection, as in the paged decode kernel)."""
+    interpret = resolve_interpret(interpret)
     b, c, hq, dl = q_lat.shape
     dr = q_rope.shape[-1]
     n, page, dtot = latent_pages.shape

@@ -127,7 +127,9 @@ class Model:
         return False
 
     def decode_step_paged(self, params: Params, state: DecodeState,
-                          tokens: jax.Array) -> Tuple[jax.Array, DecodeState]:
+                          tokens: jax.Array,
+                          backend: str = None) -> Tuple[jax.Array,
+                                                        DecodeState]:
         raise NotImplementedError(
             f"{type(self).__name__} has no paged decode path")
 
@@ -136,7 +138,8 @@ class Model:
         return False
 
     def prefill_chunk(self, params: Params, state: DecodeState,
-                      tokens: jax.Array, offset: jax.Array) -> Dict:
+                      tokens: jax.Array, offset: jax.Array,
+                      backend: str = None) -> Dict:
         raise NotImplementedError(
             f"{type(self).__name__} has no chunked prefill path")
 
@@ -539,15 +542,17 @@ class DecoderModel(Model):
         return (cfg.family in (FAMILY_DECODER, FAMILY_MOE)
                 and self.kv_dtype != "int8")
 
-    def decode_step_paged(self, params, state, tokens):
+    def decode_step_paged(self, params, state, tokens, backend=None):
         """One batched decode step over a paged KV pool.
 
         state: {"k_pages"/"v_pages" [L, N, page, Hkv, hd]} (or MLA
         {"latent_pages" [L, N, page, dl+dr]}) + "block_tables" [B, P]
         int32 + "lengths" [B] int32.  The new token's KV is scattered
         into each request's current page; attention reads through the
-        block table via the Pallas paged kernels (table entry 0 is the
-        caller's scratch page for inactive batch rows).
+        block table via the paged attention ops (table entry 0 is the
+        caller's scratch page for inactive batch rows).  ``backend``
+        selects the kernel backend (``kernels/backend.py``: compiled
+        Pallas on TPU / jitted XLA gathers elsewhere by default).
         """
         from repro.kernels import ops
 
@@ -578,7 +583,8 @@ class DecoderModel(Model):
                 q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
                                    lp["attn"]["w_uk"])
                 ctx = ops.mla_decode(q_lat[:, 0], q_rope[:, 0], latp, bt,
-                                     new_len, d_latent=dl, scale=scale)
+                                     new_len, d_latent=dl, scale=scale,
+                                     backend=backend)
                 out = jnp.einsum("bhl,lhk->bhk", ctx, lp["attn"]["w_uv"])
                 o = jnp.einsum("bhk,hkd->bd", out, lp["attn"]["wo"])[:, None]
                 x = x + o
@@ -598,7 +604,8 @@ class DecoderModel(Model):
                                                    shd=NOSHARD)
                 kp = kp.at[page_ids, offs].set(k_new[:, 0].astype(kp.dtype))
                 vp = vp.at[page_ids, offs].set(v_new[:, 0].astype(vp.dtype))
-                o = ops.paged_decode(q[:, 0], kp, vp, bt, new_len)
+                o = ops.paged_decode(q[:, 0], kp, vp, bt, new_len,
+                                     backend=backend)
                 mask = attn.head_mask(cfg, o.dtype)
                 if mask is not None:
                     o = o * mask              # zero padded layout heads
@@ -621,7 +628,7 @@ class DecoderModel(Model):
     def supports_chunked_prefill(self) -> bool:
         return self.supports_paged_decode()
 
-    def prefill_chunk(self, params, state, tokens, offset):
+    def prefill_chunk(self, params, state, tokens, offset, backend=None):
         """Prefill a fixed-size prompt chunk against the request's
         already-resident paged KV.
 
@@ -655,7 +662,8 @@ class DecoderModel(Model):
                 q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
                                    lp["attn"]["w_uk"])
                 ctx = ops.mla_prefill(q_lat, q_rope, latent, latp, bt,
-                                      offset, d_latent=dl, scale=scale)
+                                      offset, d_latent=dl, scale=scale,
+                                      backend=backend)
                 out = jnp.einsum("bshl,lhk->bshk", ctx, lp["attn"]["w_uv"])
                 o = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
                 x = x + o
@@ -673,7 +681,8 @@ class DecoderModel(Model):
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = attn.project_qkv(lp["attn"], h, positions, cfg,
                                        shd=NOSHARD)
-            o = ops.paged_prefill(q, k, v, kp, vp, bt, offset)
+            o = ops.paged_prefill(q, k, v, kp, vp, bt, offset,
+                                  backend=backend)
             mask = attn.head_mask(cfg, o.dtype)
             if mask is not None:
                 o = o * mask              # zero padded layout heads

@@ -40,6 +40,7 @@ original monolithic prefill-at-admission for A/B comparison.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
@@ -53,6 +54,7 @@ from repro.core import sizing
 from repro.core.cache_manager import PredictiveCacheManager
 from repro.core.tiers import (TPU_V5E_TIER_SPECS, AsyncTierTransferWorker,
                               TierSpec, TransferRequest)
+from repro.kernels.backend import resolve_backend
 from repro.models.model import build_model
 from repro.serving import sampler as sampler_mod
 from repro.serving.kvcache import PagedKVCache, SlotKVCache
@@ -84,6 +86,11 @@ class EngineConfig:
     #                                   kv_budget_bytes (False: trace replay
     #                                   keeps the pressure capacities of the
     #                                   supplied tier_specs verbatim)
+    kernel_backend: Optional[str] = None   # paged-op backend: "pallas" |
+    #                                   "interpret" | "xla"; None resolves
+    #                                   via kernels/backend.py (the
+    #                                   REPRO_KERNEL_BACKEND env var, else
+    #                                   pallas on TPU / xla elsewhere)
 
 
 class ServingEngine:
@@ -106,6 +113,10 @@ class ServingEngine:
             status_quo_sizing=engine_cfg.status_quo_sizing,
             max_step_tokens=engine_cfg.max_step_tokens))
         self.paged = engine_cfg.paged and self.model.supports_paged_decode()
+        # resolved once per engine: the paged attention ops' backend
+        # (compiled Pallas on TPU, jitted XLA gathers elsewhere; the env
+        # var / config override is validated here, at construction)
+        self.kernel_backend = resolve_backend(engine_cfg.kernel_backend)
         if self.paged:
             bt = sizing.block_tokens(cfg)
             if bt % engine_cfg.page_tokens != 0:
@@ -115,8 +126,10 @@ class ServingEngine:
             self.kv = PagedKVCache(self.model, self.scheduler.n_slots,
                                    engine_cfg.max_len,
                                    page_tokens=engine_cfg.page_tokens)
-            self._decode = jax.jit(self.model.decode_step_paged,
-                                   donate_argnums=(1,))
+            self._decode = jax.jit(
+                functools.partial(self.model.decode_step_paged,
+                                  backend=self.kernel_backend),
+                donate_argnums=(1,))
         else:
             self.kv = SlotKVCache(self.model, self.scheduler.n_slots,
                                   engine_cfg.max_len)
@@ -141,7 +154,9 @@ class ServingEngine:
                         and self.model.supports_chunked_prefill())
         self._rng = jax.random.PRNGKey(engine_cfg.seed + 1)
         self._prefill = jax.jit(self.model.prefill)
-        self._prefill_chunk = jax.jit(self.model.prefill_chunk)
+        self._prefill_chunk = jax.jit(
+            functools.partial(self.model.prefill_chunk,
+                              backend=self.kernel_backend))
         # request_id -> [payload | None, length]; payload is the staging
         # buffer — dropped once the async demotion write lands
         self._preempted_payloads: Dict[int, list] = {}
@@ -584,6 +599,7 @@ class ServingEngine:
     def stats(self) -> dict:
         out = {"scheduler": self.scheduler.stats(),
                "cache": self.manager.metrics(),
+               "kernel_backend": self.kernel_backend,
                "steps": self.steps,
                "idle_transfer_waits": self.idle_transfer_waits,
                "paged": self.paged,

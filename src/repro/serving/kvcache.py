@@ -26,9 +26,11 @@ so tier demotion/promotion is layout-agnostic.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,6 +45,19 @@ class SlotInfo:
     request_id: int = -1
     length: int = 0
     active: bool = False
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_pool(arr, pids, offs, data):
+    """Scatter ``data`` [L, W, ...] into pool ``arr`` [L, N, page, ...]
+    at (pids[w], offs[w]).  Jitted with the pool donated: the update
+    runs in place instead of copying the whole pool per write (the
+    eager ``.at[].set`` both copied and re-compiled for every distinct
+    token count — the compile storm that dominated replay wall-clock
+    once the kernels themselves were compiled).  The compile cache is
+    module-level, so every engine/replica with the same pool and
+    chunk-buffer shapes shares one compilation."""
+    return arr.at[:, pids, offs].set(data.astype(arr.dtype))
 
 
 class _KVCacheBase:
@@ -317,10 +332,14 @@ class PagedKVCache(_KVCacheBase):
     def write_range(self, slot: int, state1: Dict, start: int,
                     n_tokens: int) -> None:
         """Scatter a batch-1 KV state into positions [start, start+n),
-        allocating (and CoW-privatizing) pages as needed.  One scatter
-        per pool tensor — the functional update copies the whole pool in
-        eager mode, so per-page updates would cost pages-touched full
-        copies instead of one."""
+        allocating (and CoW-privatizing) pages as needed.  One donated
+        jitted scatter per pool tensor (``_scatter_pool``): the index
+        arrays span the data buffer's FULL width (chunk buffer / block
+        payload), with entries past ``n_tokens`` directed at the
+        reserved scratch page 0 — so the scatter shape depends only on
+        the buffer shape, compiles once per buffer (not once per token
+        count), and the hot chunked-prefill path hits one cached
+        executable for every chunk."""
         self._ensure_pages(slot, start + n_tokens)
         for pi in range(start // self.page,
                         (start + n_tokens - 1) // self.page + 1):
@@ -330,13 +349,16 @@ class PagedKVCache(_KVCacheBase):
         else:
             items = [("k_pages", state1["k"][:, 0]),
                      ("v_pages", state1["v"][:, 0])]
+        width = items[0][1].shape[1]
         pos = np.arange(start, start + n_tokens)
-        pid_arr = jnp.asarray(self.tables[slot, pos // self.page])
-        off_arr = jnp.asarray(pos % self.page)
+        pids = np.zeros(width, np.int32)
+        offs = np.zeros(width, np.int32)
+        pids[:n_tokens] = self.tables[slot, pos // self.page]
+        offs[:n_tokens] = pos % self.page
+        pid_arr, off_arr = jnp.asarray(pids), jnp.asarray(offs)
         for key, data in items:
-            arr = self.pools[key]
-            self.pools[key] = arr.at[:, pid_arr, off_arr].set(
-                jnp.asarray(data[:, :n_tokens], arr.dtype))
+            self.pools[key] = _scatter_pool(self.pools[key], pid_arr,
+                                            off_arr, data)
 
     # ------------------------------------------------------------------
     # reads

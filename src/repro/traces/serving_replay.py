@@ -153,6 +153,12 @@ class ServingReplayConfig:
     #                                     the spec-derived stall
     fetch_stall_s: float = 1e-3         # "fixed" mode: flat stall per
     #                                     promotion (the old constant)
+    kernel_backend: Optional[str] = None   # paged-op backend ("pallas" /
+    #                                     "interpret" / "xla"); None
+    #                                     resolves via kernels/backend.py
+    #                                     (xla off-TPU — several times
+    #                                     faster replay wall-clock than
+    #                                     the old interpret-mode default)
     max_steps: int = 50_000
 
 
@@ -334,7 +340,8 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
         async_transfers=rcfg.async_transfers,
         page_tokens=rcfg.page_tokens,
         prefill_chunk_tokens=rcfg.prefill_chunk_tokens,
-        max_step_tokens=rcfg.max_step_tokens)
+        max_step_tokens=rcfg.max_step_tokens,
+        kernel_backend=rcfg.kernel_backend)
     return ServingEngine(cfg, ecfg)
 
 
@@ -661,6 +668,7 @@ def run_replay_serving_table(
         workloads: Sequence[str] = ("sharegpt", "lmsys", "agentic"),
         policies: Sequence[str] = ("lru", "ema", "bayesian"), *,
         n_sessions: int = 12, seed: int = 0, max_turns: int = 6,
+        kernel_backend: Optional[str] = None,
         ) -> List[ServingReplayResult]:
     """Table-V-style sweep through the live engine (one seed: the live
     replay is ~100x the cost of the block-level replay per run; the
@@ -670,7 +678,8 @@ def run_replay_serving_table(
         for policy in policies:
             out.append(run_serving_replay(ServingReplayConfig(
                 workload=wl, policy=policy, n_sessions=n_sessions,
-                seed=seed, max_turns=max_turns)))
+                seed=seed, max_turns=max_turns,
+                kernel_backend=kernel_backend)))
     return out
 
 
@@ -679,6 +688,7 @@ def run_cluster_table(
         n_replicas: Sequence[int] = (1, 2, 4),
         routings: Sequence[str] = ("affine", "round_robin"),
         n_sessions: int = 12, seed: int = 0, max_turns: int = 6,
+        kernel_backend: Optional[str] = None,
         ) -> List[ClusterReplayResult]:
     """The fleet-level sweep behind ``benchmarks/run.py --table
     cluster``: ``n_replicas x routing_policy`` on one workload.  The
@@ -692,5 +702,5 @@ def run_cluster_table(
             out.append(run_cluster_replay(ClusterReplayConfig(
                 workload=workload, policy=policy, n_sessions=n_sessions,
                 seed=seed, max_turns=max_turns, n_replicas=n,
-                routing=routing)))
+                routing=routing, kernel_backend=kernel_backend)))
     return out
