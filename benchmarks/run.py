@@ -301,6 +301,37 @@ def cluster_benchmark(fast: bool = False, backend: str = None) -> None:
         _row(f"{key}.tbt_p95_ms", round(1e3 * r.tbt_p95, 1))
         _row(f"{key}.virtual_tok_per_s", round(r.throughput_tok_s, 1))
         _row(f"{key}.wall_s", round(r.wall_s, 1))
+    # shared tier-4 cells: same sweep with the fleet-shared namespace —
+    # the incl_shared column is the fleet hit counting cross-replica
+    # tier-4 imports (a fabric fetch instead of a re-prefill); the
+    # recovered points vs the replica-private cells above come at the
+    # cost of shared_fetch stalls (fetched blocks)
+    shared_rows = run_cluster_table(
+        n_replicas=(1, 2) if fast else (1, 2, 4),
+        n_sessions=n_sessions, max_turns=max_turns,
+        kernel_backend=backend, shared_tier=True)
+    for r in shared_rows:
+        key = f"cluster.lmsys.shared.n{r.n_replicas}.{r.routing}"
+        _row(f"{key}.fleet_hit_pct", round(100 * r.fleet_hit_rate, 1))
+        _row(f"{key}.fleet_hit_incl_shared_pct",
+             round(100 * r.fleet_hit_rate_incl_shared, 1), exp)
+        _row(f"{key}.shared_fetch_blocks", r.shared_hit_blocks)
+        _row(f"{key}.ttft_p95_ms", round(1e3 * r.ttft_p95, 1))
+        _row(f"{key}.virtual_tok_per_s", round(r.throughput_tok_s, 1))
+        _row(f"{key}.wall_s", round(r.wall_s, 1))
+    # prefix-aware routing cell: probe every replica's radix tree and
+    # route to the longest live prefix (shared tier on)
+    pr = run_cluster_replay(ClusterReplayConfig(
+        workload="lmsys", policy="bayesian", n_sessions=n_sessions,
+        max_turns=max_turns, n_replicas=2, routing="prefix",
+        kernel_backend=backend, shared_tier=True))
+    key = "cluster.lmsys.shared.n2.prefix"
+    _row(f"{key}.fleet_hit_pct", round(100 * pr.fleet_hit_rate, 1))
+    _row(f"{key}.fleet_hit_incl_shared_pct",
+         round(100 * pr.fleet_hit_rate_incl_shared, 1), exp)
+    _row(f"{key}.shared_fetch_blocks", pr.shared_hit_blocks)
+    _row(f"{key}.ttft_p95_ms", round(1e3 * pr.ttft_p95, 1))
+    _row(f"{key}.wall_s", round(pr.wall_s, 1))
     # failover cell: 2 affine replicas, one killed mid-replay — the
     # graceful-degradation recomputation tax
     f = run_cluster_replay(ClusterReplayConfig(
@@ -316,6 +347,26 @@ def cluster_benchmark(fast: bool = False, backend: str = None) -> None:
     _row(f"{key}.ttft_p95_ms", round(1e3 * f.ttft_p95, 1))
     _row(f"{key}.requests", f.requests_done)
     _row(f"{key}.wall_s", round(f.wall_s, 1))
+    # scale-out cells: third replica joins mid-replay, with and without
+    # the warm-up push — the post-join TTFT spike the warm-up removes
+    for warm in (False, True):
+        j = run_cluster_replay(ClusterReplayConfig(
+            workload="lmsys", policy="bayesian", n_sessions=n_sessions,
+            max_turns=max_turns, n_replicas=2, routing="affine",
+            add_replica_after_turns=max(2, n_sessions // 2),
+            shared_tier=True, warmup_on_add=warm,
+            kernel_backend=backend))
+        key = ("cluster.lmsys.join.n2to3.warmup" if warm
+               else "cluster.lmsys.join.n2to3.cold")
+        _row(f"{key}.postjoin_ttft_p95_ms",
+             round(1e3 * j.postjoin_ttft_p95, 1),
+             "<=1.2x steady" if warm else None)
+        _row(f"{key}.steady_ttft_p95_ms", round(1e3 * j.steady_ttft_p95, 1))
+        _row(f"{key}.warmed_sessions", j.warmed_sessions)
+        _row(f"{key}.warmed_blocks", j.warmed_blocks)
+        _row(f"{key}.fleet_hit_incl_shared_pct",
+             round(100 * j.fleet_hit_rate_incl_shared, 1))
+        _row(f"{key}.wall_s", round(j.wall_s, 1))
 
 
 def micro_benchmarks() -> None:

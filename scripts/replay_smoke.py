@@ -4,7 +4,8 @@
 harness completes and produces sane accounting — then the same trace
 through a 2-replica ReplicaCluster with a mid-replay failover,
 asserting every turn still completes and the redispatch/re-prefill
-accounting is consistent.
+accounting is consistent — then once more with the fleet-shared tier 4
+bound, asserting cross-replica imports actually happen.
 
 The smoke also enforces a wall-clock budget (``REPLAY_SMOKE_BUDGET_S``,
 0/unset disables): under the compiled ``xla`` kernel backend the whole
@@ -63,6 +64,29 @@ def cluster_smoke() -> None:
           f"wall {r.wall_s:.1f}s")
 
 
+def shared_tier_smoke() -> None:
+    """2 replicas with the fleet-shared tier 4 bound, session-blind
+    routing: the trace's cross-session sharing must surface as at least
+    one cross-replica tier-4 import, counted on top of the hot rate.
+    3 sessions (odd) so round-robin genuinely alternates a session's
+    turns across replicas — with 2 sessions on 2 replicas the parity
+    makes round-robin accidentally session-affine."""
+    r = run_cluster_replay(ClusterReplayConfig(
+        workload="agentic", policy="bayesian", n_sessions=3, max_turns=2,
+        n_replicas=2, routing="round_robin", shared_tier=True,
+        max_steps=500))
+    assert r.requests_done == 6, f"expected 6 turns, got {r.requests_done}"
+    assert r.shared_tier
+    assert r.shared_hit_blocks > 0, "no cross-replica shared-tier imports"
+    assert r.fleet_hit_rate_incl_shared >= r.fleet_hit_rate
+    assert r.shared_hit_rate <= r.fleet_hit_rate_incl_shared <= 1.0
+    print(f"shared-tier smoke ok: {r.requests_done} turns, "
+          f"hot {100 * r.fleet_hit_rate:.1f}%, "
+          f"incl-shared {100 * r.fleet_hit_rate_incl_shared:.1f}%, "
+          f"{r.shared_hit_blocks} imported blocks, "
+          f"wall {r.wall_s:.1f}s")
+
+
 def main() -> None:
     budget_s = float(os.environ.get("REPLAY_SMOKE_BUDGET_S", "0"))
     t0 = time.perf_counter()
@@ -71,11 +95,19 @@ def main() -> None:
     t1 = time.perf_counter()
     cluster_smoke()
     t_cluster = time.perf_counter() - t1
+    t2 = time.perf_counter()
+    shared_tier_smoke()
+    t_shared = time.perf_counter() - t2
     elapsed = time.perf_counter() - t0
+    # the tier-1 pytest step exports its wall time (TIER1_WALL_S) so the
+    # job log carries one consolidated timing line
+    tier1_s = os.environ.get("TIER1_WALL_S", "")
     print(f"smoke summary: kernel_backend={default_backend()} "
           f"single={t_single:.1f}s cluster={t_cluster:.1f}s "
-          f"total={elapsed:.1f}s "
+          f"shared={t_shared:.1f}s total={elapsed:.1f}s "
           f"budget={budget_s:.0f}s" + (" (disabled)" if not budget_s else ""))
+    print(f"pytest -m 'not slow' wall: "
+          + (f"{float(tier1_s):.0f}s" if tier1_s else "n/a (TIER1_WALL_S unset)"))
     # wall-clock budget: ~2x the compiled-backend baseline on a CI
     # runner — an interpret-mode fallback (or an equivalent wall-clock
     # regression) blows well past it

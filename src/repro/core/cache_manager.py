@@ -35,8 +35,8 @@ from repro.core.eviction import (BayesianPolicy, BlockMeta, EMAPolicy,
                                  LRUPolicy)
 from repro.core.policy import PlacementPolicy
 from repro.core.prefetch import RoPEPrefetcher
-from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError, TierHierarchy,
-                              TierSpec)
+from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError, FleetKVStore,
+                              SharedTierView, TierHierarchy, TierSpec)
 
 
 @dataclass
@@ -62,6 +62,9 @@ class ManagerStats:
     dedup_hits: int = 0
     reregistrations: int = 0     # known content re-registered after a drop
     #                              (a cold miss the radix path cannot see)
+    shared_tier_hits: int = 0    # blocks imported from the fleet-shared
+    #                              tier (content another replica published)
+    shared_publishes: int = 0    # blocks this replica published fleet-wide
     fetch_time: float = 0.0
     recompute_time: float = 0.0
 
@@ -119,6 +122,127 @@ class PredictiveCacheManager:
         self._ids = itertools.count()
         self._lock = threading.RLock()
         self._payloads: Dict[str, np.ndarray] = {}
+        # fleet-shared tier 4 (bound post-construction by the cluster)
+        self._fleet: Optional[FleetKVStore] = None
+        self._fleet_owner = ""
+        self._fleet_view: Optional[SharedTierView] = None
+
+    # ------------------------------------------------------------------
+    # fleet-shared tier binding (cluster-owned tier-4 namespace)
+    # ------------------------------------------------------------------
+    @property
+    def fleet_bound(self) -> bool:
+        return self._fleet is not None
+
+    def bind_fleet_store(self, store: FleetKVStore, owner: str) -> bool:
+        """Swap this hierarchy's tier 4 for a ``SharedTierView`` over the
+        cluster's fleet store.  Must happen before traffic — blocks
+        already resident in the private tier 4 do not migrate.  Returns
+        False when the hierarchy has no tier 4 (reduced hierarchies)."""
+        with self._lock:
+            for i, t in enumerate(self.hierarchy.tiers):
+                if t.spec.tier_id == 4:
+                    view = SharedTierView(store, owner,
+                                          resolve_key=self._content_key)
+                    view.available = t.available
+                    self.hierarchy.tiers[i] = view
+                    self._fleet, self._fleet_owner = store, owner
+                    self._fleet_view = view
+                    return True
+            return False
+
+    def _content_key(self, block_id: str) -> Optional[str]:
+        """Local block id -> fleet content key (None when the content
+        hash is unknown, e.g. preempt payload blobs — those fall back to
+        an owner-scoped key and never dedup across replicas)."""
+        meta = self.metas.get(block_id)
+        h = getattr(meta, "content_hash", None) if meta is not None else None
+        return f"c:{h}" if h else None
+
+    def publish_block(self, block_id: str) -> bool:
+        """Push one registered block into the fleet-shared tier (content
+        key + payload), acquiring this owner's reference.  Idempotent
+        per block; a no-op without a bound fleet store."""
+        view = self._fleet_view
+        if view is None or not view.available:
+            return False
+        with self._lock:
+            meta = self.metas.get(block_id)
+            if meta is None:
+                return False
+            try:
+                new_mapping = block_id not in view._map
+                view.write(block_id, self._payloads.get(block_id),
+                           nbytes=meta.nbytes)
+            except CapacityError:
+                return False           # fleet pool full of live refs
+            if new_mapping:
+                self.stats.shared_publishes += 1
+            return True
+
+    def import_shared_block(self, tokens: Sequence[int], *,
+                            block_type: str = "user_context",
+                            recompute_cost: float = 0.05,
+                            positions: Tuple[int, int] = (0, 0)
+                            ) -> Optional[Tuple[str, np.ndarray]]:
+        """Probe the fleet-shared tier for a block of identical content
+        published by ANOTHER replica.  On hit: fetch the payload, charge
+        a tier-4 demand fetch (the replay stall model prices it from the
+        ``tier_hits`` delta, same as a local lower-tier hit), register
+        the block locally and publish this owner's reference.  Returns
+        (block_id, payload), or None when the content is locally known
+        already (not a cross-replica import) or not in the fleet."""
+        if self._fleet is None:
+            return None
+        with self._lock:
+            h = content_hash(tokens, salt=self.cfg.name)
+            if self.store is not None:
+                canonical = self.store.lookup(h)
+                if canonical is not None and canonical in self.metas:
+                    return None        # local content: not an import
+            key = f"c:{h}"
+            if not self._fleet.has_payload(key):
+                return None
+            payload, _ = self._fleet.fetch(key)
+            if payload is None:
+                return None
+            tid = self._fleet.tier.spec.tier_id
+            self.stats.shared_tier_hits += 1
+            self.stats.tier_hits[tid] = self.stats.tier_hits.get(tid, 0) + 1
+            self.stats.fetch_time += \
+                self._fleet.tier.spec.transfer_time(self.block_bytes)
+            # a fleet fetch is NOT a local recompute: keep the
+            # reregistration counter (replay's cold-miss proxy) flat
+            rereg = self.stats.reregistrations
+            bid, _ = self.register_block(
+                tokens, block_type=block_type, payload=payload,
+                recompute_cost=recompute_cost, positions=positions)
+            self.stats.reregistrations = rereg
+            self.publish_block(bid)
+            return bid, payload
+
+    def adopt_sequence(self, tokens: Sequence[int],
+                       payloads: Sequence[Optional[np.ndarray]], *,
+                       block_type: str = "user_context") -> List[str]:
+        """Scale-out warm-up: register a remapped session's prefix blocks
+        (payloads pushed from the previous owner) and index the prefix,
+        so the joining replica's first turn hits hot instead of
+        re-prefilling."""
+        bt = self.block_tokens
+        ids: List[str] = []
+        n = (len(tokens) // bt) * bt
+        with self._lock:
+            for j, i in enumerate(range(0, n, bt)):
+                pl = payloads[j] if j < len(payloads) else None
+                bid, _ = self.register_block(
+                    list(tokens[i:i + bt]), block_type=block_type,
+                    payload=pl, positions=(i, i + bt))
+                if pl is not None and bid not in self._payloads:
+                    self._payloads[bid] = pl
+                ids.append(bid)
+            if ids:
+                self.radix.insert(list(tokens[:n]), ids)
+        return ids
 
     # ------------------------------------------------------------------
     # time base (trace replay advances a virtual clock)
@@ -203,6 +327,17 @@ class PredictiveCacheManager:
         prefill compute for the caller)."""
         return [bid for bid in self.radix.match(tokens) if bid in self.metas]
 
+    def peek_prefix_blocks(self, tokens: Sequence[int]) -> int:
+        """Number of live radix-matched prefix blocks, WITHOUT bumping
+        hit counters — the prefix-aware router probes every replica per
+        routed request, and probing must not skew the hotness signal."""
+        depth = 0
+        for bid in self.radix.probe(tokens):
+            if bid not in self.metas:
+                break
+            depth += 1
+        return depth
+
     # ------------------------------------------------------------------
     # admission & eviction
     # ------------------------------------------------------------------
@@ -246,20 +381,25 @@ class PredictiveCacheManager:
             if hot_exit:
                 self._observe_drop(victim)
             if nxt is None:
-                tier.evict(victim.block_id)
-                self.radix.remove_block(victim.block_id)
-                self._payloads.pop(victim.block_id, None)
-                self.metas.pop(victim.block_id, None)
+                self._drop_block(victim.block_id)
             else:
                 self._make_room(nxt, victim.nbytes, _depth + 1)
                 try:
                     self.hierarchy.move(victim.block_id, tier_id, nxt)
                     self.stats.demotions += 1
                 except CapacityError:
-                    tier.evict(victim.block_id)
-                    self.radix.remove_block(victim.block_id)
-                    self._payloads.pop(victim.block_id, None)
-                    self.metas.pop(victim.block_id, None)
+                    self._drop_block(victim.block_id)
+
+    def _drop_block(self, block_id: str) -> None:
+        """Fully unregister one block: evicted from EVERY tier (a block
+        published to the fleet-shared tier 4 is dual-resident, and an
+        evict of only its fastest copy would strand the shared-tier
+        reference), plus radix/payload/meta teardown."""
+        for t in self.hierarchy.tiers:
+            t.evict(block_id)
+        self.radix.remove_block(block_id)
+        self._payloads.pop(block_id, None)
+        self.metas.pop(block_id, None)
 
     def _evict_one(self, tier_id: int) -> bool:
         free_before = self.hierarchy[tier_id].free
@@ -435,20 +575,18 @@ class PredictiveCacheManager:
             if retain:
                 continue
             if meta.reuse_prob < 0.2:
-                loc = self.hierarchy.locate(bid)
-                if loc is not None:
-                    self.hierarchy[loc].evict(bid)
-                self.radix.remove_block(bid)
-                self.metas.pop(bid, None)
-                self._payloads.pop(bid, None)
+                self._drop_block(bid)
 
     def release_all(self) -> None:
         """Drop every block registration and tier-resident copy (replica
         failover teardown): payloads, tier residency, block metadata,
         the radix prefix index and the dedup store are all cleared so
-        nothing keeps the dead replica's KV alive.  ``self.stats`` is
-        deliberately retained — the cluster aggregates it after the
-        replica is gone."""
+        nothing keeps the dead replica's KV alive.  With a bound fleet
+        store, evicting the shared-tier view releases every one of THIS
+        owner's fleet references — bytes other replicas still reference
+        stay resident (the cross-replica refcount invariant).
+        ``self.stats`` is deliberately retained — the cluster aggregates
+        it after the replica is gone."""
         with self._lock:
             for tier in self.hierarchy.tiers:
                 for bid in tier.blocks():
@@ -477,6 +615,9 @@ class PredictiveCacheManager:
             "promotions": self.stats.promotions,
             "demotions": self.stats.demotions,
             "cold_misses": self.stats.cold_misses,
+            "shared_tier_hits": self.stats.shared_tier_hits,
+            "shared_publishes": self.stats.shared_publishes,
+            "fleet": self._fleet.stats() if self._fleet else {},
             "dedup": self.store.stats() if self.store else {},
             "tiers": self.hierarchy.stats(),
             "predictor": self.predictor.snapshot(),

@@ -72,6 +72,12 @@ class ContentStore:
         with self._lock:
             return h in self._by_hash
 
+    def lookup(self, h: str) -> Optional[str]:
+        """Canonical block id for ``h`` (None if never interned) —
+        without touching the refcount."""
+        with self._lock:
+            return self._by_hash.get(h)
+
     def refcount(self, block_id: str) -> int:
         with self._lock:
             return self._refs.get(block_id, 0)
@@ -153,6 +159,22 @@ class RadixTree:
                 if child is None or not child.block_ids:
                     break
                 child.hits += 1
+                out.append(child.block_ids[0])
+                node = child
+        return out
+
+    def probe(self, tokens: Sequence[int]) -> List[str]:
+        """Non-mutating ``match``: the same longest-prefix walk without
+        bumping hit counters.  The prefix-aware router polls EVERY
+        replica's tree per routed request; probing must not skew the
+        hotness signal the eviction policies read."""
+        out: List[str] = []
+        with self._lock:
+            node = self.root
+            for blk in self._blocks_of(tokens):
+                child = node.children.get(blk)
+                if child is None or not child.block_ids:
+                    break
                 out.append(child.block_ids[0])
                 node = child
         return out

@@ -278,14 +278,17 @@ class ConsistentHashRing:
 class RDMATier(TierManager):
     """Distributed block pool across the fabric using a consistent hash
     ring.  Each peer holds a shard; one-sided reads fetch remote blocks.
-    Node failure: the ring drops the peer and its blocks become misses
-    (re-fetched from tier 5 or recomputed) — graceful degradation."""
+    Node failure: the ring drops the peer and its displaced blocks are
+    re-homed onto the surviving ring (a modelled re-replication write
+    per block); blocks are lost only when no peer survives — graceful
+    degradation."""
 
     def __init__(self, spec: TierSpec, nodes: Sequence[str] = ("node0",),
                  vnodes: int = 64):
         super().__init__(spec)
         self.ring = ConsistentHashRing(nodes, vnodes=vnodes)
         self._node_store: Dict[str, Dict[str, float]] = {n: {} for n in nodes}
+        self.rehomed_blocks = 0        # fail_node re-replications
 
     def placement(self, block_id: str) -> str:
         return self.ring.lookup(block_id)
@@ -305,16 +308,250 @@ class RDMATier(TierManager):
         self._node_store.setdefault(node, {})
 
     def fail_node(self, node: str) -> List[str]:
-        """Drop a peer; returns the block ids that were lost."""
-        self.ring.remove_node(node)
-        lost = list(self._node_store.pop(node, {}))
-        for bid in lost:
-            if self.contains(bid):
-                TierManager.evict(self, bid)
-        return lost
+        """Drop a peer and re-home its displaced blocks through the ring
+        onto the survivors (each re-insertion charges one re-replication
+        write).  Returns the block ids actually lost — non-empty only
+        when the failed peer was the last one."""
+        with self._lock:
+            self.ring.remove_node(node)
+            displaced = list(self._node_store.pop(node, {}))
+            lost: List[str] = []
+            for bid in displaced:
+                if not self.contains(bid):
+                    continue
+                if not self.ring.nodes:
+                    TierManager.evict(self, bid)
+                    lost.append(bid)
+                    continue
+                nbytes = self._sizes[bid]
+                survivor = self.ring.lookup(bid)
+                self._node_store.setdefault(survivor, {})[bid] = nbytes
+                self._charge(nbytes, read=False)   # re-replication write
+                self.rehomed_blocks += 1
+            return lost
 
     def node_load(self) -> Dict[str, float]:
         return {n: sum(s.values()) for n, s in self._node_store.items()}
+
+
+# ---------------------------------------------------------------------------
+# Fleet-shared tier-4 namespace (one RDMA pool for every replica)
+# ---------------------------------------------------------------------------
+class FleetKVStore:
+    """One fleet-wide, content-addressed tier-4 namespace.
+
+    The paper treats the RDMA/fabric tier as a *fleet* resource, not a
+    per-node spillway: every replica's ``TierHierarchy`` binds a
+    ``SharedTierView`` over this store, and blocks are keyed by content
+    hash — a popular template's blocks occupy fabric bytes once no
+    matter how many replicas registered them.
+
+    Reference counting is per (owner, local block id) mapping: a view's
+    allocate acquires one reference, its evict releases it.  A key whose
+    refcount reaches zero STAYS resident — it is exactly the cross-
+    replica prefix cache — and is reclaimed lazily, oldest-first, only
+    under capacity pressure (``_make_room``).  Eviction never touches a
+    key with live references, so one replica's teardown can never strand
+    or free another replica's blocks.
+    """
+
+    def __init__(self, spec: Optional[TierSpec] = None,
+                 nodes: Sequence[str] = ("node0", "node1", "node2", "node3"),
+                 vnodes: int = 64):
+        spec = PAPER_TIER_SPECS[4] if spec is None else spec
+        self.tier = RDMATier(spec, nodes=nodes, vnodes=vnodes)
+        self._refs: Dict[str, int] = {}
+        self._lock = threading.RLock()
+        self.publishes = 0             # writes that added new bytes
+        self.dedup_publishes = 0       # ref bumps on already-resident keys
+        self.fetches = 0               # demand payload reads
+        self.evicted_cold = 0          # zero-ref keys reclaimed for room
+
+    # -- key namespace ------------------------------------------------------
+    def ref_count(self, key: str) -> int:
+        with self._lock:
+            return self._refs.get(key, 0)
+
+    def contains_key(self, key: str) -> bool:
+        return self.tier.contains(key)
+
+    def has_payload(self, key: str) -> bool:
+        with self._lock:
+            return (self.tier.contains(key)
+                    and self.tier._store.get(key) is not None)
+
+    # -- reference lifecycle ------------------------------------------------
+    def acquire(self, key: str, payload: Optional[np.ndarray],
+                nbytes: float) -> bool:
+        """One owner reference on ``key``; bytes are written only if the
+        content is not already resident.  Returns True when new bytes
+        were written (False: dedup — the fleet already had it)."""
+        with self._lock:
+            if self.tier.contains(key):
+                self._refs[key] = self._refs.get(key, 0) + 1
+                if payload is not None and self.tier._store.get(key) is None:
+                    self.tier._store[key] = payload
+                self.dedup_publishes += 1
+                return False
+            self._make_room(nbytes)
+            self.tier.write(key, payload, nbytes=nbytes)
+            self._refs[key] = self._refs.get(key, 0) + 1
+            self.publishes += 1
+            return True
+
+    def put_payload(self, key: str, payload: np.ndarray) -> None:
+        with self._lock:
+            if self.tier.contains(key) and \
+                    self.tier._store.get(key) is None:
+                self.tier._store[key] = payload
+
+    def release(self, key: str) -> None:
+        """Drop one owner reference.  Zero-ref keys stay resident (the
+        shared prefix cache) until capacity pressure reclaims them."""
+        with self._lock:
+            n = self._refs.get(key, 0) - 1
+            if n <= 0:
+                self._refs.pop(key, None)
+            else:
+                self._refs[key] = n
+
+    def _make_room(self, nbytes: float) -> None:
+        """Reclaim zero-ref keys, oldest-first.  Keys with live owner
+        references are never evicted — the no-stranded-reference
+        invariant the shared-tier tests pin down."""
+        if self.tier.free >= nbytes:
+            return
+        for key in list(self.tier._sizes):
+            if self._refs.get(key, 0) == 0:
+                self.tier.evict(key)
+                self.evicted_cold += 1
+                if self.tier.free >= nbytes:
+                    return
+
+    # -- data path ----------------------------------------------------------
+    def fetch(self, key: str) -> Tuple[Optional[np.ndarray], float]:
+        """Demand read of a shared block: (payload, modelled transfer
+        seconds), or (None, 0.0) when the key is not resident."""
+        with self._lock:
+            if not self.tier.contains(key):
+                return None, 0.0
+            payload, t = self.tier.read(key)
+            self.fetches += 1
+            return payload, t
+
+    def peek(self, key: str) -> Optional[np.ndarray]:
+        """Payload without transfer accounting (intra-owner reads the
+        per-view stats already charge)."""
+        with self._lock:
+            return self.tier._store.get(key)
+
+    def fail_node(self, node: str) -> List[str]:
+        return self.tier.fail_node(node)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"keys": len(self.tier._sizes),
+                    "used": self.tier.used,
+                    "capacity": self.tier.spec.capacity,
+                    "live_refs": sum(self._refs.values()),
+                    "publishes": self.publishes,
+                    "dedup_publishes": self.dedup_publishes,
+                    "fetches": self.fetches,
+                    "evicted_cold": self.evicted_cold,
+                    "rehomed_blocks": self.tier.rehomed_blocks}
+
+
+class SharedTierView(TierManager):
+    """One replica's tier-4 adapter over the ``FleetKVStore``.
+
+    Local block ids translate to fleet keys — the block's content hash
+    when the resolver knows it, an owner-scoped fallback otherwise — so
+    colliding local ids (every manager names blocks ``blk0, blk1, …``)
+    never alias across replicas, while identical *content* always does.
+
+    ``used``/``blocks``/``stats`` are owner-scoped (this replica's
+    mappings only): teardown of one replica zeroes ITS view without
+    touching bytes other owners still reference.  ``free`` is fleet-wide
+    — capacity genuinely is shared — so the demotion cascade sees the
+    real pool headroom.
+    """
+
+    def __init__(self, store: FleetKVStore, owner: str,
+                 resolve_key: Optional[Callable[[str],
+                                               Optional[str]]] = None):
+        super().__init__(store.tier.spec)
+        self.fleet = store
+        self.owner = owner
+        self._resolve = resolve_key
+        self._map: Dict[str, str] = {}     # local bid -> fleet key
+
+    def _key(self, block_id: str) -> str:
+        key = self._resolve(block_id) if self._resolve is not None else None
+        return key if key else f"{self.owner}:{block_id}"
+
+    @property
+    def free(self) -> float:
+        return self.fleet.tier.free
+
+    def contains(self, block_id: str) -> bool:
+        with self._lock:
+            key = self._map.get(block_id)
+            return key is not None and self.fleet.contains_key(key)
+
+    def fleet_key(self, block_id: str) -> Optional[str]:
+        with self._lock:
+            return self._map.get(block_id)
+
+    def allocate(self, block_id: str, nbytes: float) -> None:
+        with self._lock:
+            if not self.available:
+                raise CapacityError(f"tier {self.spec.name} unavailable")
+            if block_id in self._map:
+                return
+            key = self._key(block_id)
+            self.fleet.acquire(key, None, nbytes)     # may raise Capacity
+            self._map[block_id] = key
+            self._sizes[block_id] = nbytes
+            self._used += nbytes
+
+    def write(self, block_id: str, payload: Optional[np.ndarray],
+              nbytes: Optional[float] = None) -> float:
+        with self._lock:
+            key = self._map.get(block_id)
+            if key is not None and not self.fleet.contains_key(key):
+                # the fleet copy died (total node loss): drop the stale
+                # mapping and re-acquire below
+                self.evict(block_id)
+                key = None
+            if key is None:
+                size = float(nbytes if nbytes is not None
+                             else (payload.nbytes if payload is not None
+                                   else 0))
+                self.allocate(block_id, size)
+                key = self._map[block_id]
+            if payload is not None:
+                self.fleet.put_payload(key, payload)
+            return self._charge(self._sizes[block_id], read=False)
+
+    def read(self, block_id: str) -> Tuple[Optional[np.ndarray], float]:
+        with self._lock:
+            if not self.available:
+                raise CapacityError(f"tier {self.spec.name} unavailable")
+            key = self._map.get(block_id)
+            if key is None or not self.fleet.contains_key(key):
+                raise KeyError(block_id)
+            payload = self.fleet.peek(key)
+            return payload, self._charge(self._sizes[block_id], read=True)
+
+    def evict(self, block_id: str) -> None:
+        with self._lock:
+            key = self._map.pop(block_id, None)
+            if key is None:
+                return
+            self._used -= self._sizes.pop(block_id)
+            self._store.pop(block_id, None)
+            self.stats.evictions += 1
+            self.fleet.release(key)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,28 @@ Routing policies (``make_router``):
   * ``least_loaded`` — route to the replica with the fewest live
     requests (waiting + running + preempted + blocked); ties break by
     name for determinism.
+  * ``prefix`` — prefix-cache-aware routing: probe every replica's
+    radix tree (non-mutating) for the request's tokens and route to the
+    replica holding the longest matching prefix; with no match anywhere
+    (or no tokens available) fall back to least-loaded.  A session
+    sticks to its replica implicitly — its turn-1 prefix registers
+    there, so turn 2's probe finds it — and, unlike hash affinity, two
+    sessions sharing a template prefix co-locate on the replica that
+    already holds it.
+
+**Fleet-shared tier 4** (``shared_tier=True``): the cluster owns one
+``core/tiers.FleetKVStore`` — a content-addressed RDMA namespace — and
+binds every replica's tier 4 to it (``SharedTierView``), so a popular
+template's blocks occupy fabric bytes once fleet-wide and a replica can
+import a prefix another replica published (a tier-4 fetch instead of a
+re-prefill).  A failed replica's teardown releases only ITS references;
+shared bytes other replicas still use stay resident.
+
+**Scale-out warm-up** (``add_replica(warmup=True)``): before the joiner
+takes traffic, sessions the router remaps onto it get their registered
+prefix blocks (payloads included) pushed from their previous replica,
+so the first post-join turn hits hot instead of paying a re-prefill
+TTFT spike.
 
 Failover (``fail_replica``): the dead replica's scheduler is drained —
 waiting, running, preempted AND transfer-blocked requests — and every
@@ -44,10 +66,10 @@ router; under ``affine`` routing ~1/n of the session space remaps to it
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cache_manager import ManagerStats
-from repro.core.tiers import ConsistentHashRing
+from repro.core.tiers import ConsistentHashRing, FleetKVStore
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Request
 
@@ -58,7 +80,10 @@ from repro.serving.request import Request
 class RoutingPolicy:
     """Maps a session key to a replica name.  Stateful: policies are
     told about replica join/leave so failover and scale-out re-route
-    without the cluster knowing policy internals."""
+    without the cluster knowing policy internals.  ``tokens`` (the
+    request's prompt tokens, when the dispatcher has them) lets
+    content-aware policies inspect the prefix; hash/load policies
+    ignore it."""
 
     name = "?"
 
@@ -68,8 +93,8 @@ class RoutingPolicy:
     def remove_replica(self, replica: str) -> None:
         raise NotImplementedError
 
-    def route(self, key: str,
-              engines: Dict[str, "ServingEngine"]) -> str:
+    def route(self, key: str, engines: Dict[str, "ServingEngine"] = None,
+              tokens: Optional[Sequence[int]] = None) -> str:
         raise NotImplementedError
 
 
@@ -92,7 +117,7 @@ class SessionAffinityRouter(RoutingPolicy):
     def remove_replica(self, replica: str) -> None:
         self.ring.remove_node(replica)
 
-    def route(self, key: str, engines=None) -> str:
+    def route(self, key: str, engines=None, tokens=None) -> str:
         return self.ring.lookup(f"{self.salt}:{key}" if self.salt else key)
 
 
@@ -114,7 +139,7 @@ class RoundRobinRouter(RoutingPolicy):
         if replica in self._replicas:
             self._replicas.remove(replica)
 
-    def route(self, key: str, engines=None) -> str:
+    def route(self, key: str, engines=None, tokens=None) -> str:
         if not self._replicas:
             raise RuntimeError("no replicas")
         out = self._replicas[self._next % len(self._replicas)]
@@ -143,16 +168,60 @@ class LeastLoadedRouter(RoutingPolicy):
     def _load(eng: "ServingEngine") -> int:
         return eng.scheduler.live_count()
 
-    def route(self, key: str, engines: Dict[str, "ServingEngine"]) -> str:
+    def route(self, key: str, engines: Dict[str, "ServingEngine"] = None,
+              tokens=None) -> str:
         if not self._replicas:
             raise RuntimeError("no replicas")
         return min(self._replicas, key=lambda n: (self._load(engines[n]), n))
+
+
+class PrefixAwareRouter(RoutingPolicy):
+    """Prefix-cache-aware routing: probe every replica's radix tree
+    (non-mutating) for the request's tokens; the replica holding the
+    longest live matching prefix wins (ties break by name).  With no
+    match anywhere — or no tokens supplied — fall back to least-loaded.
+
+    Sessions stick implicitly: turn 1 registers its prefix on whichever
+    replica it lands, so turn 2's probe finds it there.  Unlike hash
+    affinity, sessions sharing a template prefix co-locate."""
+
+    name = "prefix"
+
+    def __init__(self):
+        self._replicas: List[str] = []
+
+    def add_replica(self, replica: str) -> None:
+        if replica not in self._replicas:
+            self._replicas.append(replica)
+            self._replicas.sort()
+
+    def remove_replica(self, replica: str) -> None:
+        if replica in self._replicas:
+            self._replicas.remove(replica)
+
+    def route(self, key: str, engines: Dict[str, "ServingEngine"] = None,
+              tokens: Optional[Sequence[int]] = None) -> str:
+        if not self._replicas:
+            raise RuntimeError("no replicas")
+        if tokens is not None and engines:
+            best, best_n = "", 0
+            for n in self._replicas:
+                depth = engines[n].manager.peek_prefix_blocks(tokens)
+                if depth > best_n:
+                    best, best_n = n, depth
+            if best_n > 0:
+                return best
+        if not engines:
+            return self._replicas[0]
+        return min(self._replicas,
+                   key=lambda n: (engines[n].scheduler.live_count(), n))
 
 
 ROUTERS: Dict[str, Callable[[], RoutingPolicy]] = {
     "affine": SessionAffinityRouter,
     "round_robin": RoundRobinRouter,
     "least_loaded": LeastLoadedRouter,
+    "prefix": PrefixAwareRouter,
 }
 
 
@@ -179,7 +248,10 @@ class ReplicaCluster:
                  n_replicas: int = 2, *, routing: str = "affine",
                  engine_factory: Optional[Callable[[], ServingEngine]] = None,
                  router: Optional[RoutingPolicy] = None,
-                 name_prefix: str = "replica"):
+                 name_prefix: str = "replica",
+                 shared_tier: bool = False,
+                 rdma_nodes: Sequence[str] = ("node0", "node1",
+                                              "node2", "node3")):
         if engine_factory is None:
             if cfg is None:
                 raise ValueError("need cfg+engine_cfg or engine_factory")
@@ -189,6 +261,19 @@ class ReplicaCluster:
         self._next_replica = 0
         self.router = router if router is not None else make_router(routing)
         self.engines: Dict[str, ServingEngine] = {}
+        # fleet-shared tier 4: one content-addressed namespace every
+        # replica's TierHierarchy binds (created lazily from the first
+        # replica's tier-4 spec so replay tier overrides apply)
+        self._shared_tier = shared_tier
+        self._rdma_nodes = tuple(rdma_nodes)
+        self.fleet_store: Optional[FleetKVStore] = None
+        # session → last submitted prompt / serving replica, kept for
+        # the scale-out warm-up path (push remapped sessions' hot
+        # blocks to a joiner before it takes traffic)
+        self._session_prompt: Dict[str, List[int]] = {}
+        self._session_replica: Dict[str, str] = {}
+        self.warmed_blocks = 0
+        self.warmed_sessions = 0
         # failed replicas keep ONLY their ManagerStats and completed
         # count for fleet rollup — retaining the dead engine would keep
         # its params and KV pool (the dominant allocations) alive
@@ -207,9 +292,14 @@ class ReplicaCluster:
     def n_replicas(self) -> int:
         return len(self.engines)
 
-    def add_replica(self, name: Optional[str] = None) -> str:
-        """Join a fresh share-nothing replica; under affine routing
-        ~1/n of the session space remaps onto it."""
+    def add_replica(self, name: Optional[str] = None, *,
+                    warmup: bool = False) -> str:
+        """Join a fresh replica; under affine routing ~1/n of the
+        session space remaps onto it.  With ``warmup=True`` the
+        sessions the router remaps onto the joiner get their prefix
+        blocks (payloads included) pushed from their previous replica
+        BEFORE the joiner takes traffic, so the first post-join turn
+        hits hot instead of paying a re-prefill TTFT spike."""
         if name is None:
             name = f"{self._prefix}{self._next_replica}"
         self._next_replica += 1
@@ -217,9 +307,46 @@ class ReplicaCluster:
             # a failed replica's name stays reserved: reusing it would
             # collide the stats rollups and mark the newcomer failed
             raise ValueError(f"replica {name!r} already exists")
-        self.engines[name] = self._factory()
+        eng = self._factory()
+        if self._shared_tier:
+            if self.fleet_store is None:
+                spec = next((t.spec for t in eng.manager.hierarchy.tiers
+                             if t.spec.tier_id == 4), None)
+                if spec is not None:
+                    self.fleet_store = FleetKVStore(
+                        spec, nodes=self._rdma_nodes)
+            if self.fleet_store is not None:
+                eng.bind_fleet_store(self.fleet_store, name)
+        self.engines[name] = eng
         self.router.add_replica(name)
+        if warmup:
+            for sid, prompt in self._session_prompt.items():
+                src = self._session_replica.get(sid)
+                if src is None or src == name or src not in self.engines:
+                    continue
+                if self.route(sid) != name:
+                    continue             # session did not remap to joiner
+                n = self._warm_session(sid, prompt, src, name)
+                if n:
+                    self.warmed_blocks += n
+                    self.warmed_sessions += 1
         return name
+
+    def _warm_session(self, sid: str, prompt: List[int],
+                      src_name: str, dst_name: str) -> int:
+        """Copy one remapped session's registered prefix blocks (with
+        payloads) from its previous replica to the joiner.  Returns the
+        number of blocks adopted."""
+        src = self.engines[src_name].manager
+        dst = self.engines[dst_name].manager
+        tokens = list(prompt)[:-1]       # engines never cache the last token
+        bids = src.match_prefix(tokens)
+        if not bids:
+            return 0
+        bt = src.block_tokens
+        payloads = [src._payloads.get(b) for b in bids]
+        adopted = dst.adopt_sequence(tokens[:len(bids) * bt], payloads)
+        return len(adopted)
 
     def fail_replica(self, name: str) -> int:
         """Kill a replica: drain every live request (waiting, running,
@@ -238,8 +365,11 @@ class ReplicaCluster:
             # the successor re-prefills the prompt from scratch
             self.reprefill_tokens += req.prompt_len + len(req.generated)
             req.reset_for_redispatch()
-            target = self.route(req.session_id or str(req.request_id))
+            target = self.route(req.session_id or str(req.request_id),
+                                tokens=list(req.prompt)[:-1])
             self.engines[target].scheduler.submit(req)
+            if req.session_id is not None:
+                self._session_replica[req.session_id] = target
             self.redispatched += 1
             self.redispatch_log.append((req.request_id, name, target))
         self.failed_stats[name] = eng.manager.stats
@@ -248,19 +378,29 @@ class ReplicaCluster:
         return len(lost)
 
     # -- dispatch -----------------------------------------------------------
-    def route(self, session_key: str) -> str:
-        return self.router.route(session_key, self.engines)
+    def route(self, session_key: str,
+              tokens: Optional[Sequence[int]] = None) -> str:
+        return self.router.route(session_key, self.engines, tokens)
 
-    def submit(self, prompt, *, session_id: Optional[str] = None,
-               **kw) -> Request:
-        # session-less requests route by a fresh surrogate key so they
-        # still spread across the ring
+    def dispatch(self, prompt, *, session_id: Optional[str] = None,
+                 **kw) -> Tuple[str, Request]:
+        """Route + submit; returns (replica_name, request).  Session-less
+        requests route by a fresh surrogate key so they still spread
+        across the ring."""
         key = session_id if session_id is not None \
             else f"anon{self._anon_ids}"
         self._anon_ids += 1
-        target = self.route(key)
-        return self.engines[target].submit(prompt, session_id=session_id,
-                                           **kw)
+        target = self.route(key, tokens=list(prompt)[:-1])
+        if session_id is not None:
+            self._session_prompt[session_id] = list(prompt)
+            self._session_replica[session_id] = target
+        req = self.engines[target].submit(prompt, session_id=session_id,
+                                          **kw)
+        return target, req
+
+    def submit(self, prompt, *, session_id: Optional[str] = None,
+               **kw) -> Request:
+        return self.dispatch(prompt, session_id=session_id, **kw)[1]
 
     # -- stepping -----------------------------------------------------------
     def busy(self) -> List[Tuple[str, ServingEngine]]:
@@ -317,7 +457,12 @@ class ReplicaCluster:
                "failed_replicas": sorted(self.failed_stats),
                "routing": self.router.name,
                "redispatched": self.redispatched,
-               "reprefill_tokens": self.reprefill_tokens}
+               "reprefill_tokens": self.reprefill_tokens,
+               "shared_tier": self._shared_tier,
+               "warmed_blocks": self.warmed_blocks,
+               "warmed_sessions": self.warmed_sessions}
+        if self.fleet_store is not None:
+            agg["fleet_store"] = self.fleet_store.stats()
         agg["done"] = sum(s["scheduler"]["done"]
                           for s in agg["replicas"].values())
         agg["done"] += sum(self.failed_done.values())

@@ -180,8 +180,17 @@ class ServingEngine:
         self.prefill_tokens_total = 0  # prompt tokens through the chunk path
         self.cow_share_hits = 0        # prefix blocks served by CoW page map
         self.inject_hits = 0           # ... by tier payload injection
+        self.shared_fetch_hits = 0     # ... imported from the fleet-shared
+        #                                tier (content another replica
+        #                                published; charged as tier-4 fetch)
         self.last_step_prefill_tokens = 0
         self.max_step_prefill_tokens = 0   # budget-compliance witness
+
+    # ------------------------------------------------------------------
+    def bind_fleet_store(self, store, owner: str) -> bool:
+        """Bind this replica's tier 4 to the cluster's fleet-shared KV
+        store (see ``core/tiers.FleetKVStore``); call before traffic."""
+        return self.manager.bind_fleet_store(store, owner)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], *, params: SamplingParams = None,
@@ -265,6 +274,30 @@ class ServingEngine:
                 self.inject_hits += 1
             prefix_len += bt
             n_hit += 1
+        # fleet-shared tier probe: past the local radix match, content
+        # ANOTHER replica published extends the prefix via a tier-4
+        # fetch + payload injection — paid as a fetch stall, but far
+        # cheaper than re-prefilling the blocks (and once imported the
+        # blocks are local + hot for the session's next turn)
+        if mgr.fleet_bound:
+            while prefix_len + bt <= len(effective):
+                blk = effective[prefix_len:prefix_len + bt]
+                btype = req.block_type
+                if req.block_types is not None and \
+                        prefix_len // bt < len(req.block_types):
+                    btype = req.block_types[prefix_len // bt]
+                got = mgr.import_shared_block(
+                    blk, block_type=btype,
+                    recompute_cost=self._block_recompute_cost(),
+                    positions=(prefix_len, prefix_len + bt))
+                if got is None:
+                    break
+                bid, pl = got
+                self.kv.inject_block(slot, pl, prefix_len)
+                self.shared_fetch_hits += 1
+                req.shared_hit_blocks += 1
+                prefix_len += bt
+                n_hit += 1
         req.prefix_hit_blocks = n_hit
 
         if self.chunked:
@@ -321,6 +354,10 @@ class ServingEngine:
                 mgr._payloads[bid] = self.kv.extract_block(slot, i * bt, bt)
             if self.paged:
                 self.kv.register_block_pages(bid, slot, i * bt, bt)
+            if mgr.fleet_bound:
+                # publish-on-register: the block (payload included) joins
+                # the fleet-shared tier so sibling replicas can import it
+                mgr.publish_block(bid)
         req.block_ids = new_ids
         if new_ids:
             self._block_epoch += 1
@@ -608,7 +645,8 @@ class ServingEngine:
                "prefill_tokens": self.prefill_tokens_total,
                "max_step_prefill_tokens": self.max_step_prefill_tokens,
                "cow_share_hits": self.cow_share_hits,
-               "inject_hits": self.inject_hits}
+               "inject_hits": self.inject_hits,
+               "shared_fetch_hits": self.shared_fetch_hits}
         if self.paged:
             out["allocator"] = self.kv.allocator.stats_dict()
         if self.worker is not None:

@@ -53,6 +53,9 @@ class Request:
     prefix_hit_blocks: int = 0         # radix-matched blocks (skipped prefill)
     hot_hit_blocks: int = 0            # ... of those, resident in tiers 0-1
     #                                    at access time (paper Table V hit)
+    shared_hit_blocks: int = 0         # blocks imported from the fleet-shared
+    #                                    tier (another replica's content; a
+    #                                    tier-4 fetch, NOT a hot hit)
     # chunked prefill: tokens to prefill (prompt [+ generated] minus the
     # final token) and the per-request chunk cursor into them
     prefill_tokens: Optional[List[int]] = None
@@ -94,6 +97,7 @@ class Request:
         self.block_ids = []
         self.prefix_hit_blocks = 0
         self.hot_hit_blocks = 0
+        self.shared_hit_blocks = 0
         self.prefill_tokens = None
         self.prefill_pos = 0
         self.t_first_token = None

@@ -167,7 +167,8 @@ class ClusterReplayConfig(ServingReplayConfig):
     """Multi-replica replay: ``ServingReplayConfig`` plus fleet shape,
     routing policy and optional mid-replay membership events."""
     n_replicas: int = 2
-    routing: str = "affine"             # affine | round_robin | least_loaded
+    routing: str = "affine"             # affine | round_robin |
+    #                                     least_loaded | prefix
     ring_salt: str = ""                 # affine: seeds the session→replica
     #                                     assignment without renaming nodes
     fail_replica_after_turns: Optional[int] = None   # fail one replica once
@@ -176,6 +177,11 @@ class ClusterReplayConfig(ServingReplayConfig):
     #                                     replica with the most live work)
     add_replica_after_turns: Optional[int] = None    # scale out by one
     #                                     replica at this completion count
+    shared_tier: bool = False           # bind every replica's tier 4 to one
+    #                                     fleet-shared content-addressed store
+    warmup_on_add: bool = False         # push remapped sessions' prefix
+    #                                     blocks to a joining replica before
+    #                                     it takes traffic
 
 
 @dataclass
@@ -221,6 +227,7 @@ class ReplicaReplayStats:
     manager_hit_rate: float        # the replica manager's own hot-hit rate
     promotions: int
     demotions: int
+    shared_hit_blocks: int = 0     # blocks imported from the fleet tier
 
 
 @dataclass
@@ -247,6 +254,19 @@ class ClusterReplayResult:
     virtual_time_s: float
     steps: int                     # fleet iterations
     wall_s: float
+    # fleet-shared tier 4 (zeros when shared_tier=False)
+    shared_tier: bool = False
+    shared_hit_blocks: int = 0     # fleet-tier imports across all requests
+    shared_hit_rate: float = 0.0   # shared imports / seen blocks
+    fleet_hit_rate_incl_shared: float = 0.0  # (hot + shared imports) / seen:
+    #                                the fleet-level hit — a shared import is
+    #                                a tier-4 fetch, not a re-prefill
+    # scale-out warm-up (zeros unless add_replica fired mid-replay)
+    joined_replica: str = ""
+    postjoin_ttft_p95: float = 0.0  # turns served by the joiner
+    steady_ttft_p95: float = 0.0    # turns elsewhere, never redispatched
+    warmed_blocks: int = 0
+    warmed_sessions: int = 0
 
 
 @dataclass
@@ -420,6 +440,8 @@ class _ReplayCore:
     steps: int
     wall_s: float
     sessions: int
+    join_name: str = ""            # replica added mid-replay ("" if none)
+    join_v: float = 0.0            # virtual time of the join
 
 
 def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
@@ -427,6 +449,8 @@ def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
                      fail_after: Optional[int] = None,
                      fail_name: Optional[str] = None,
                      add_after: Optional[int] = None,
+                     shared_tier: bool = False,
+                     warmup_on_add: bool = False,
                      turn_log: Optional[List[dict]] = None) -> _ReplayCore:
     """Drive one workload x policy through ``n_replicas`` live engines
     under the shared virtual clock; the single-engine replay is exactly
@@ -448,7 +472,7 @@ def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
         if routing == "affine" else make_router(routing)
     cluster = ReplicaCluster(
         engine_factory=lambda: build_engine(rcfg, cfg, max_len=max_len),
-        n_replicas=n_replicas, router=router)
+        n_replicas=n_replicas, router=router, shared_tier=shared_tier)
     stall = _FetchStallModel(rcfg,
                              next(iter(cluster.engines.values())))
 
@@ -477,8 +501,7 @@ def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
             spec = specs[i][next_turn[i]]
             n_seen = sum(1 for c in spec.acct_cids if c in seen)
             seen.update(spec.acct_cids)
-            target = cluster.route(spec.session_id)
-            req = cluster.engines[target].submit(
+            target, req = cluster.dispatch(
                 spec.prompt,
                 params=SamplingParams(max_new_tokens=spec.max_new),
                 session_id=spec.session_id,
@@ -554,7 +577,8 @@ def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
         if (add_after is not None and not added_once
                 and done_count >= add_after):
             added_once = True
-            cluster.add_replica()
+            join_name = cluster.add_replica(warmup=warmup_on_add)
+            join_v = vt
         if steps >= rcfg.max_steps:
             break
     cluster.shutdown()
@@ -563,7 +587,9 @@ def _run_replay_core(rcfg: ServingReplayConfig, *, n_replicas: int = 1,
     return _ReplayCore(cluster=cluster, tracked=tracked,
                        seen_total=sum(t.seen_blocks for t in done),
                        virtual_time=vt, steps=steps,
-                       wall_s=time.time() - t_wall, sessions=n_sess)
+                       wall_s=time.time() - t_wall, sessions=n_sess,
+                       join_name=join_name if added_once else "",
+                       join_v=join_v if added_once else 0.0)
 
 
 def _latency_rollup(core: _ReplayCore) -> dict:
@@ -626,12 +652,20 @@ def run_cluster_replay(rcfg: ClusterReplayConfig,
         fail_after=rcfg.fail_replica_after_turns,
         fail_name=rcfg.fail_replica_name,
         add_after=rcfg.add_replica_after_turns,
+        shared_tier=rcfg.shared_tier,
+        warmup_on_add=rcfg.warmup_on_add,
         turn_log=turn_log)
     cluster = core.cluster
     done = [t for t in core.tracked.values() if t.done_v is not None]
     seen_total = core.seen_total
     hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
     served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
+    # a shared-tier import is a tier-4 fetch instead of a re-prefill:
+    # count it toward the fleet-level hit (capped, like hot, at the
+    # request's previously-seen ground truth)
+    shared = sum(min(t.req.shared_hit_blocks, t.seen_blocks) for t in done)
+    incl = sum(min(t.req.hot_hit_blocks + t.req.shared_hit_blocks,
+                   t.seen_blocks) for t in done)
 
     per_replica: List[ReplicaReplayStats] = []
     mgr_stats = cluster.manager_stats()
@@ -650,8 +684,20 @@ def run_cluster_replay(rcfg: ClusterReplayConfig,
             hit_rate=s_hot / s_seen if s_seen else 0.0,
             reuse_rate=s_served / s_seen if s_seen else 0.0,
             manager_hit_rate=ms.hit_rate,
-            promotions=ms.promotions, demotions=ms.demotions))
+            promotions=ms.promotions, demotions=ms.demotions,
+            shared_hit_blocks=sum(t.req.shared_hit_blocks for t in mine)))
     lat = _latency_rollup(core)
+    # scale-out warm-up: TTFT of turns the joiner served vs steady-state
+    # turns (elsewhere, never redispatched) — the post-join spike metric
+    postjoin = steady = 0.0
+    if core.join_name:
+        j_ttfts = [t.token_times[0] - t.submit_v for t in done
+                   if t.replica == core.join_name and t.token_times]
+        s_ttfts = [t.token_times[0] - t.submit_v for t in done
+                   if t.replica != core.join_name and t.token_times
+                   and t.redispatches == 0]
+        postjoin = _percentile(j_ttfts, 0.95)
+        steady = _percentile(s_ttfts, 0.95)
     return ClusterReplayResult(
         workload=rcfg.workload, policy=rcfg.policy, routing=rcfg.routing,
         n_replicas=len(names),
@@ -661,7 +707,15 @@ def run_cluster_replay(rcfg: ClusterReplayConfig,
         redispatched=cluster.redispatched,
         reprefill_tokens=cluster.reprefill_tokens,
         failed_replicas=sorted(cluster.failed_stats),
-        sessions=core.sessions, **lat)
+        sessions=core.sessions,
+        shared_tier=rcfg.shared_tier,
+        shared_hit_blocks=shared,
+        shared_hit_rate=shared / seen_total if seen_total else 0.0,
+        fleet_hit_rate_incl_shared=incl / seen_total if seen_total else 0.0,
+        joined_replica=core.join_name,
+        postjoin_ttft_p95=postjoin, steady_ttft_p95=steady,
+        warmed_blocks=cluster.warmed_blocks,
+        warmed_sessions=cluster.warmed_sessions, **lat)
 
 
 def run_replay_serving_table(
@@ -689,11 +743,15 @@ def run_cluster_table(
         routings: Sequence[str] = ("affine", "round_robin"),
         n_sessions: int = 12, seed: int = 0, max_turns: int = 6,
         kernel_backend: Optional[str] = None,
+        shared_tier: bool = False,
         ) -> List[ClusterReplayResult]:
     """The fleet-level sweep behind ``benchmarks/run.py --table
     cluster``: ``n_replicas x routing_policy`` on one workload.  The
     headline question: does session-affine routing recover the
-    single-engine hit rate that session-blind routing fragments?"""
+    single-engine hit rate that session-blind routing fragments?  With
+    ``shared_tier=True`` every cell binds the fleet-shared tier 4, and
+    the incl-shared hit rate shows how many of the fragmented points a
+    cross-replica tier-4 fetch recovers."""
     out = []
     for n in n_replicas:
         for routing in routings:
@@ -702,5 +760,6 @@ def run_cluster_table(
             out.append(run_cluster_replay(ClusterReplayConfig(
                 workload=workload, policy=policy, n_sessions=n_sessions,
                 seed=seed, max_turns=max_turns, n_replicas=n,
-                routing=routing, kernel_backend=kernel_backend)))
+                routing=routing, kernel_backend=kernel_backend,
+                shared_tier=shared_tier)))
     return out
