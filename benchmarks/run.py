@@ -580,6 +580,23 @@ def ttft_benchmark(chunked: bool, fast: bool = False,
     eng.shutdown()
 
 
+def steploop_benchmark(fast: bool = False, backend: str = None) -> None:
+    """Step-loop dispatch-vs-compute microbench (``--table steploop``).
+
+    Fused vs unfused rows per batch; the acceptance gate on the fused
+    largest-batch row is host_overhead < kernel_time (the ROADMAP
+    "host-overhead war" target: batch 16 on CPU-xla).  ``--fast``
+    (CI smoke) shrinks batch and step counts to fit the smoke budget —
+    the gate row is only meaningful at full scale.
+    """
+    from benchmarks.steploop_bench import run_steploop_table
+    batches = (8,) if fast else (4, 16)
+    steps = 10 if fast else 30
+    print(f"# Step loop — dispatch vs compute per stage "
+          f"(reduced llama3.2-1b){' [fast]' if fast else ''}")
+    run_steploop_table(batches=batches, backend=backend, steps=steps)
+
+
 def kernel_benchmarks(backend: str = None, fast: bool = False) -> None:
     """Per-op kernel-backend microbenchmark (``--table kernels``).
 
@@ -677,7 +694,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--table", default=None,
                     help="run one: 1,3,4,5,6,7,8,9,micro,kernels,serving,"
-                         "ttft,replay,cluster")
+                         "ttft,replay,cluster,steploop")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serving benchmark: paged block-table KV path "
@@ -731,6 +748,8 @@ def main() -> None:
         replay_benchmark(fast=args.fast, backend=args.backend)
     if sel == "cluster":
         cluster_benchmark(fast=args.fast, backend=args.backend)
+    if sel == "steploop":
+        steploop_benchmark(fast=args.fast, backend=args.backend)
     print(f"# done in {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,240 @@
+"""Dispatch-vs-compute microbench for the serving step loop.
+
+Modeled on jax's ``benchmarks/api_benchmark.py`` idiom: each step-loop
+stage is timed twice — **dispatch-only** (issue the call, don't wait;
+the host-side Python + dispatch cost the step loop pays even when the
+device is busy) and **blocked** (``jax.block_until_ready``; the full
+per-call latency including the kernel).  The gap between a full
+``engine.step()`` and the blocked decode-closure latency is the
+step-loop *host overhead*: scheduler planning, block-table bookkeeping,
+sampling dispatches, prefetch planning, manager ticks.
+
+The ROADMAP target this harness gates: host overhead < kernel time at
+batch 16 on CPU-xla, fused step loop (``--table steploop`` in
+``benchmarks/run.py``).
+
+Stages:
+    step          full ``ServingEngine.step()`` in steady-state decode
+    decode        the jitted decode(+sample) closure, chained through
+                  its donated KV state (dispatch vs blocked)
+    state_build   a full ``PagedKVCache.decode_state`` rebuild (table
+                  mask + host->device upload; the fused loop amortizes
+                  this away via the cached device state)
+    sample        the sampling stage: per-request ``sample`` dispatches
+                  + per-token device syncs (unfused) vs one batched
+                  ``sample_batched`` call + one sync (fused)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class StepLoopResult:
+    batch: int
+    fused: bool
+    backend: str
+    steps: int                # measured engine steps
+    step_ms: float            # mean full engine.step() wall
+    kernel_ms: float          # blocked decode-closure latency per call
+    dispatch_ms: float        # decode-closure dispatch-only per call
+    state_build_ms: float     # full decode_state rebuild
+    sample_ms: float          # sampling stage (style matches `fused`)
+    state_reuses: int
+    state_rebuilds: int
+    recompiles: dict
+
+    @property
+    def host_ms(self) -> float:
+        """Step wall minus the blocked decode closure: everything the
+        host does around the kernel."""
+        return max(0.0, self.step_ms - self.kernel_ms)
+
+    @property
+    def ratio(self) -> float:
+        """host_ms / kernel_ms — the acceptance gate wants < 1.0."""
+        return self.host_ms / self.kernel_ms if self.kernel_ms > 0 else 0.0
+
+
+def build_steady_engine(batch: int, fused: bool, backend: str = None,
+                        prompt_len: int = 64, max_len: int = 256):
+    """An engine with ``batch`` requests all in steady-state decode
+    (prefill complete, nobody near finishing)."""
+    from repro.config import reduce_config
+    from repro.configs import get_config
+    from repro.core import sizing
+    from repro.serving import EngineConfig, SamplingParams, ServingEngine
+    from repro.serving.request import Phase
+
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    # budget sized to exactly `batch` decode slots so the closure's
+    # batch dimension IS the benchmarked batch
+    budget = batch * sizing.seq_bytes(cfg, max_len) + 1.0
+    eng = ServingEngine(cfg, EngineConfig(
+        max_len=max_len, kv_budget_bytes=budget, fused_step=fused,
+        kernel_backend=backend, page_tokens=32, prefill_chunk_tokens=64,
+        max_step_tokens=max(batch + 64, 128)))
+    if eng.scheduler.n_slots < batch:
+        raise RuntimeError(f"sized {eng.scheduler.n_slots} slots < {batch}")
+    rng = np.random.default_rng(0)
+    max_new = max_len - prompt_len - 1   # never finishes mid-bench
+    reqs = []
+    for _ in range(batch):
+        prompt = [int(t) for t in rng.integers(2, 200, size=prompt_len)]
+        reqs.append(eng.submit(
+            prompt, params=SamplingParams(max_new_tokens=max_new)))
+    # drive prefill to completion: all requests decoding
+    for _ in range(10_000):
+        eng.step()
+        if all(r.phase is Phase.DECODE for r in reqs):
+            break
+    else:
+        raise RuntimeError("requests never reached steady-state decode")
+    return eng, reqs
+
+
+def _time_loop(fn, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) * 1e3 / iters
+
+
+def _bench_decode_closure(eng, decode_reqs, iters: int):
+    """Chain the decode closure through its donated state: issue all
+    calls back to back (dispatch-only time), then block on the last
+    output (per-call latency ~ kernel time).  The final state is
+    absorbed back so the engine stays usable."""
+    slots = [r.slot for r in decode_reqs]
+    sa = eng.scheduler.step_arrays(decode_reqs, eng.kv.n_slots)
+    tokens = jnp.asarray(sa["tokens"])
+    if eng.fused:
+        active = jnp.asarray(sa["active"])
+        temps = jnp.asarray(sa["temperature"])
+        tks = jnp.asarray(sa["top_k"])
+        tps = jnp.asarray(sa["top_p"])
+        key = jax.random.PRNGKey(0)
+        state = eng.kv.decode_state(slots, reuse=True)
+        # warmup call outside the timed window (donation: chain state)
+        toks, state = eng._fused_decode(eng.params, state, tokens, active,
+                                        key, temps, tks, tps)
+        jax.block_until_ready(toks)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            toks, state = eng._fused_decode(eng.params, state, tokens,
+                                            active, key, temps, tks, tps)
+        t_dispatch = time.perf_counter() - t0
+        jax.block_until_ready(toks)
+        t_blocked = time.perf_counter() - t0
+        eng.kv.absorb(state, decode_slots=slots)
+    else:
+        state = eng.kv.decode_state(slots)
+        logits, state = eng._decode(eng.params, state, tokens)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            logits, state = eng._decode(eng.params, state, tokens)
+        t_dispatch = time.perf_counter() - t0
+        jax.block_until_ready(logits)
+        t_blocked = time.perf_counter() - t0
+        eng.kv.absorb(state)
+    # NOTE: the closure writes the same token position `iters` times —
+    # harmless (same pages, lengths re-absorbed below via set_length)
+    for r in decode_reqs:
+        eng.kv.set_length(r.slot, eng.kv.slots[r.slot].length)
+    return (t_dispatch * 1e3 / iters, t_blocked * 1e3 / iters)
+
+
+def _bench_sampling(eng, decode_reqs, iters: int) -> float:
+    """The sampling stage in the style the engine mode actually uses."""
+    from repro.serving import sampler as sampler_mod
+    n_slots = eng.kv.n_slots
+    vocab = eng.cfg.vocab_size
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((n_slots, vocab)),
+                         jnp.float32)
+    key = jax.random.PRNGKey(0)
+    if eng.fused:
+        sa = eng.scheduler.step_arrays(decode_reqs, n_slots)
+        temps = jnp.asarray(sa["temperature"])
+        tks = jnp.asarray(sa["top_k"])
+        tps = jnp.asarray(sa["top_p"])
+        batched = jax.jit(sampler_mod.sample_batched)
+
+        def run():
+            toks = batched(logits, key, temps, tks, tps)
+            np.asarray(toks)               # the step's single sync
+
+        run()
+        return _time_loop(run, iters)
+
+    def run():
+        for r in decode_reqs:
+            tok = sampler_mod.sample(
+                logits[r.slot:r.slot + 1], key,
+                temperature=r.params.temperature,
+                top_k=r.params.top_k, top_p=r.params.top_p)
+            int(tok[0])                    # per-request sync
+
+    run()
+    return _time_loop(run, iters)
+
+
+def bench_steploop(batch: int = 16, fused: bool = True,
+                   backend: str = None, steps: int = 30,
+                   warmup: int = 5) -> StepLoopResult:
+    """Steady-state step-loop timing for one engine mode."""
+    eng, reqs = build_steady_engine(batch, fused, backend)
+    decode_reqs = sorted((r for r in reqs), key=lambda r: r.slot)
+    try:
+        for _ in range(warmup):
+            eng.step()
+        step_ms = _time_loop(eng.step, steps)
+        dispatch_ms, kernel_ms = _bench_decode_closure(
+            eng, decode_reqs, max(4, steps // 2))
+        state_build_ms = _time_loop(
+            lambda: eng.kv.decode_state([r.slot for r in decode_reqs]),
+            max(4, steps // 2))
+        sample_ms = _bench_sampling(eng, decode_reqs, max(4, steps // 2))
+        return StepLoopResult(
+            batch=batch, fused=fused, backend=eng.kernel_backend,
+            steps=steps, step_ms=step_ms, kernel_ms=kernel_ms,
+            dispatch_ms=dispatch_ms, state_build_ms=state_build_ms,
+            sample_ms=sample_ms, state_reuses=eng.kv.state_reuses,
+            state_rebuilds=eng.kv.state_rebuilds,
+            recompiles=eng.recompiles())
+    finally:
+        eng.shutdown()
+
+
+def run_steploop_table(batches=(4, 16), backend: str = None,
+                       steps: int = 30, emit=print):
+    """The ``--table steploop`` body: fused vs unfused rows per batch;
+    returns the fused batch-max result for the acceptance gate."""
+    gate = None
+    for batch in batches:
+        for fused in (True, False):
+            r = bench_steploop(batch=batch, fused=fused, backend=backend,
+                               steps=steps)
+            tag = f"steploop.b{batch}.{'fused' if fused else 'unfused'}"
+            emit(f"{tag}.step_ms,{r.step_ms:.3f},")
+            emit(f"{tag}.kernel_ms,{r.kernel_ms:.3f},")
+            emit(f"{tag}.dispatch_ms,{r.dispatch_ms:.3f},")
+            emit(f"{tag}.state_build_ms,{r.state_build_ms:.3f},")
+            emit(f"{tag}.sample_ms,{r.sample_ms:.3f},")
+            emit(f"{tag}.host_ms,{r.host_ms:.3f},")
+            emit(f"{tag}.host_kernel_ratio,{r.ratio:.3f},<1.0")
+            if fused:
+                emit(f"{tag}.state_reuse_frac,"
+                     f"{r.state_reuses / max(1, r.state_reuses + r.state_rebuilds):.3f},")
+            if fused and batch == max(batches):
+                gate = r
+    if gate is not None:
+        verdict = "PASS" if gate.ratio < 1.0 else "FAIL"
+        emit(f"steploop.b{gate.batch}.gate_host_lt_kernel,{verdict},PASS")
+    return gate

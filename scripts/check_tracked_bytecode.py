@@ -1,0 +1,33 @@
+#!/usr/bin/env python3
+"""CI guard: fail if compiled Python bytecode is tracked by git.
+
+``src/repro/__pycache__/*.pyc`` files were committed once (PR 2) and
+later removed; ``.gitignore`` keeps new ones out of ``git add .``, but
+nothing stopped an explicit ``git add -f`` from re-introducing them.
+This check makes the regression a CI failure instead of a review catch.
+
+    python scripts/check_tracked_bytecode.py
+"""
+import re
+import subprocess
+import sys
+
+PATTERN = re.compile(r"(^|/)__pycache__(/|$)|\.py[cod]$|\.so$")
+
+
+def main() -> int:
+    files = subprocess.run(
+        ["git", "ls-files"], capture_output=True, text=True, check=True,
+    ).stdout.splitlines()
+    bad = [f for f in files if PATTERN.search(f)]
+    if bad:
+        print("tracked bytecode/compiled artifacts (git rm --cached them):")
+        for f in bad:
+            print(f"  {f}")
+        return 1
+    print(f"no tracked bytecode ({len(files)} tracked files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,9 @@ harness completes and produces sane accounting — then the same trace
 through a 2-replica ReplicaCluster with a mid-replay failover,
 asserting every turn still completes and the redispatch/re-prefill
 accounting is consistent — then once more with the fleet-shared tier 4
-bound, asserting cross-replica imports actually happen.
+bound, asserting cross-replica imports actually happen — then a smoke
+run of the fused step-loop microbench, whose host-overhead/kernel-time
+ratio lands in the summary line.
 
 The smoke also enforces a wall-clock budget (``REPLAY_SMOKE_BUDGET_S``,
 0/unset disables): under the compiled ``xla`` kernel backend the whole
@@ -87,6 +89,29 @@ def shared_tier_smoke() -> None:
           f"wall {r.wall_s:.1f}s")
 
 
+def steploop_smoke() -> float:
+    """``--table steploop`` in smoke scale (one small fused run): the
+    step loop must complete and its host-overhead/kernel-time ratio is
+    surfaced in the summary line, so a host-side bookkeeping regression
+    is visible in every CI log (the full batch-16 acceptance gate runs
+    in ``benchmarks/run.py --table steploop``)."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    if root not in sys.path:       # scripts/ is sys.path[0] when run
+        sys.path.insert(0, root)   # directly; benchmarks/ lives at root
+    from benchmarks.steploop_bench import bench_steploop
+    r = bench_steploop(batch=8, fused=True, steps=10, warmup=3)
+    assert r.step_ms > 0 and r.kernel_ms > 0
+    assert r.recompiles["fused_decode"] <= 1, (
+        f"fused step closure compiled {r.recompiles['fused_decode']} "
+        f"variants in steady state")
+    print(f"steploop smoke ok: b{r.batch} fused step {r.step_ms:.2f}ms "
+          f"(kernel {r.kernel_ms:.2f}ms, host {r.host_ms:.2f}ms, "
+          f"ratio {r.ratio:.2f})")
+    return r.ratio
+
+
 def main() -> None:
     budget_s = float(os.environ.get("REPLAY_SMOKE_BUDGET_S", "0"))
     t0 = time.perf_counter()
@@ -98,13 +123,18 @@ def main() -> None:
     t2 = time.perf_counter()
     shared_tier_smoke()
     t_shared = time.perf_counter() - t2
+    t3 = time.perf_counter()
+    steploop_ratio = steploop_smoke()
+    t_steploop = time.perf_counter() - t3
     elapsed = time.perf_counter() - t0
     # the tier-1 pytest step exports its wall time (TIER1_WALL_S) so the
     # job log carries one consolidated timing line
     tier1_s = os.environ.get("TIER1_WALL_S", "")
     print(f"smoke summary: kernel_backend={default_backend()} "
           f"single={t_single:.1f}s cluster={t_cluster:.1f}s "
-          f"shared={t_shared:.1f}s total={elapsed:.1f}s "
+          f"shared={t_shared:.1f}s steploop={t_steploop:.1f}s "
+          f"steploop_host_kernel_ratio={steploop_ratio:.2f} "
+          f"total={elapsed:.1f}s "
           f"budget={budget_s:.0f}s" + (" (disabled)" if not budget_s else ""))
     print(f"pytest -m 'not slow' wall: "
           + (f"{float(tier1_s):.0f}s" if tier1_s else "n/a (TIER1_WALL_S unset)"))

@@ -520,6 +520,28 @@ class PredictiveCacheManager:
             self.stats.prefetch_issued += len(reqs)
             return out
 
+    def plan_prefetch_many(self, items: Sequence[Tuple[Sequence[str], int]]
+                           ) -> List[Tuple[str, int]]:
+        """Batched ``plan_prefetch``: plan every decoding request's
+        RoPE-window prefetch under ONE lock acquisition (the fused step
+        loop plans once per step, not once per request).  Candidate
+        order matches the sequential per-request calls."""
+        if self.prefetcher is None or not items:
+            return []
+        with self._lock:
+            out: List[Tuple[str, int]] = []
+            resident = (lambda b: (self.hierarchy.locate(b)
+                                   in self.hot_tiers))
+            for seq_blocks, position in items:
+                reqs = self.prefetcher.plan(seq_blocks, position,
+                                            resident=resident)
+                for r in reqs:
+                    loc = self.hierarchy.locate(r.block_id)
+                    if loc is not None and loc not in self.hot_tiers:
+                        out.append((r.block_id, loc))
+                self.stats.prefetch_issued += len(reqs)
+            return out
+
     def promote_async(self, block_id: str, src: int) -> float:
         """Executed on the transfer worker thread: promote into tier 0
         under the manager lock (metas + hierarchy stay consistent).

@@ -54,6 +54,10 @@ class BlockAllocator:
         self._free: Deque[int] = deque(i for i in range(n_pages)
                                        if i not in rset)
         self._lock = threading.Lock()
+        self._in_use = 0           # incrementally tracked page count —
+        #                            alloc() used to recount every
+        #                            refcount per call, an O(n_pages)
+        #                            scan on the per-step decode path
         self.stats = AllocatorStats()
 
     # ------------------------------------------------------------------
@@ -65,7 +69,7 @@ class BlockAllocator:
     @property
     def in_use(self) -> int:
         with self._lock:
-            return sum(1 for r in self._refs if r > 0)
+            return self._in_use
 
     def refcount(self, page_id: int) -> int:
         return self._refs[page_id]
@@ -82,8 +86,9 @@ class BlockAllocator:
             for pid in out:
                 self._refs[pid] = 1
             self.stats.allocated += n
-            in_use = sum(1 for r in self._refs if r > 0)
-            self.stats.peak_in_use = max(self.stats.peak_in_use, in_use)
+            self._in_use += n
+            self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                         self._in_use)
             return out
 
     def ref(self, page_id: int, *, share: bool = False) -> None:
@@ -107,6 +112,7 @@ class BlockAllocator:
             if r == 1:
                 self._free.append(page_id)
                 self.stats.freed += 1
+                self._in_use -= 1
                 return True
             return False
 

@@ -91,6 +91,44 @@ class EngineConfig:
     #                                   via kernels/backend.py (the
     #                                   REPRO_KERNEL_BACKEND env var, else
     #                                   pallas on TPU / xla elsewhere)
+    fused_step: bool = True           # decode attention + logits + sampling
+    #                                   in ONE jitted closure with the KV
+    #                                   state donated through it and the
+    #                                   device block-table state cached
+    #                                   across steady-state steps (False:
+    #                                   per-request sampling dispatches, the
+    #                                   pre-PR7 A/B path — greedy decode is
+    #                                   token-identical either way)
+
+
+def _fused_paged_step(model, backend, params, state, tokens, active, rng,
+                      temperature, top_k, top_p):
+    """One fused decode step over the paged pool: block-table gather,
+    paged attention, logits projection and per-row sampling in a single
+    jitted program (jitted with ``state`` donated — the KV pools are
+    updated in place, never copied).
+
+    ``active`` masks the rows actually decoding this step: masked rows'
+    lengths stay put (the model returns +1 for every row), so the
+    returned state is exactly next step's input when the decode set is
+    unchanged — the engine hands it straight back without a host
+    rebuild."""
+    logits, new_state = model.decode_step_paged(params, state, tokens,
+                                                backend=backend)
+    new_state["lengths"] = state["lengths"] + active
+    toks = sampler_mod.sample_batched(logits, rng, temperature, top_k,
+                                      top_p)
+    return toks, new_state
+
+
+def _fused_dense_step(model, params, state, tokens, rng, temperature,
+                      top_k, top_p):
+    """Fused decode + sampling for the dense slot layout (lengths keep
+    the unfused dense semantics: every row advances)."""
+    logits, new_state = model.decode_step(params, state, tokens)
+    toks = sampler_mod.sample_batched(logits, rng, temperature, top_k,
+                                      top_p)
+    return toks, new_state
 
 
 class ServingEngine:
@@ -117,6 +155,7 @@ class ServingEngine:
         # (compiled Pallas on TPU, jitted XLA gathers elsewhere; the env
         # var / config override is validated here, at construction)
         self.kernel_backend = resolve_backend(engine_cfg.kernel_backend)
+        self.fused = engine_cfg.fused_step
         if self.paged:
             bt = sizing.block_tokens(cfg)
             if bt % engine_cfg.page_tokens != 0:
@@ -130,11 +169,18 @@ class ServingEngine:
                 functools.partial(self.model.decode_step_paged,
                                   backend=self.kernel_backend),
                 donate_argnums=(1,))
+            self._fused_decode = jax.jit(
+                functools.partial(_fused_paged_step, self.model,
+                                  self.kernel_backend),
+                donate_argnums=(1,))
         else:
             self.kv = SlotKVCache(self.model, self.scheduler.n_slots,
                                   engine_cfg.max_len)
             self._decode = jax.jit(self.model.decode_step,
                                    donate_argnums=(1,))
+            self._fused_decode = jax.jit(
+                functools.partial(_fused_dense_step, self.model),
+                donate_argnums=(1,))
         # scale tier-0 capacity to the configured budget so eviction and
         # tier demotion actually engage at live-test scale (replay passes
         # tier0_from_budget=False to keep its pressure capacities)
@@ -504,6 +550,111 @@ class ServingEngine:
                 execute=(lambda h, b=bid, l=loc:
                          (self.manager.promote_async(b, l), None))))
 
+    def _submit_prefetch_many(self, items) -> None:
+        """Batched prefetch for the fused step: plan every decoding
+        request's window under one manager lock, then submit."""
+        if not items:
+            return
+        if self.worker is None:
+            for block_ids, position in items:
+                self.manager.prefetch_for_position(block_ids, position)
+            return
+        for bid, loc in self.manager.plan_prefetch_many(items):
+            if bid in self._inflight_prefetch:
+                continue
+            self._inflight_prefetch.add(bid)
+            self.worker.submit(TransferRequest(
+                bid, loc, 0, kind="custom", tag="prefetch",
+                execute=(lambda h, b=bid, l=loc:
+                         (self.manager.promote_async(b, l), None))))
+
+    # ------------------------------------------------------------------
+    # batched decode: fused (default) and per-request-sampling A/B paths
+    # ------------------------------------------------------------------
+    def _decode_fused(self, decode_reqs) -> int:
+        """One fused jitted call for the whole decode batch — block-table
+        gather, paged attention, logits and per-row sampling — with the
+        KV state donated through the closure and ONE device->host sync
+        for the sampled tokens.  In steady-state decode the device state
+        from the previous step is reused verbatim (no table rebuild, no
+        upload); any host-side mutation (admission, prefill write, CoW
+        copy, release, page-boundary crossing) triggers a rebuild via
+        ``PagedKVCache.state_version``."""
+        sa = self.scheduler.step_arrays(decode_reqs, self.kv.n_slots)
+        self._rng, step_key = jax.random.split(self._rng)
+        if self.paged:
+            slots = [r.slot for r in decode_reqs]
+            state = self.kv.decode_state(slots, reuse=True)
+            toks, new_state = self._fused_decode(
+                self.params, state, jnp.asarray(sa["tokens"]),
+                jnp.asarray(sa["active"]), step_key,
+                jnp.asarray(sa["temperature"]), jnp.asarray(sa["top_k"]),
+                jnp.asarray(sa["top_p"]))
+            self.kv.absorb(new_state, decode_slots=slots)
+        else:
+            toks, self.kv.state = self._fused_decode(
+                self.params, self.kv.state, jnp.asarray(sa["tokens"]),
+                step_key, jnp.asarray(sa["temperature"]),
+                jnp.asarray(sa["top_k"]), jnp.asarray(sa["top_p"]))
+        out = np.asarray(toks)     # single sync point for the step
+        now = time.monotonic()
+        produced = 0
+        prefetch = []
+        for req in sorted(decode_reqs, key=lambda r: r.slot):
+            req.generated.append(int(out[req.slot]))
+            if req.t_first_token is None:
+                req.t_first_token = now
+            produced += 1
+            self.kv.advance(req.slot)
+            if req.block_ids:
+                prefetch.append((req.block_ids,
+                                 self.kv.slots[req.slot].length))
+        # RoPE prefetch promotions, planned once per step under one
+        # manager lock (async when the transfer worker is on)
+        self._submit_prefetch_many(prefetch)
+        return produced
+
+    def _decode_unfused(self, decode_reqs) -> int:
+        """Pre-PR7 A/B path: one decode dispatch, then one sampling
+        dispatch + device sync per request."""
+        tokens = np.zeros((self.kv.n_slots,), np.int32)
+        for req in decode_reqs:
+            last = (req.generated[-1] if req.generated
+                    else req.prompt[-1])
+            tokens[req.slot] = last
+        # advance the stream once per step (per-request sampling keys
+        # are split below)
+        self._rng, _ = jax.random.split(self._rng)
+        if self.paged:
+            state = self.kv.decode_state([r.slot for r in decode_reqs])
+            logits, new_state = self._decode(self.params, state,
+                                             jnp.asarray(tokens))
+            self.kv.absorb(new_state)
+        else:
+            logits, self.kv.state = self._decode(
+                self.params, self.kv.state, jnp.asarray(tokens))
+        now = time.monotonic()
+        produced = 0
+        # per-request sampling (params differ per request)
+        for req in sorted(decode_reqs, key=lambda r: r.slot):
+            slot = req.slot
+            self._rng, r = jax.random.split(self._rng)
+            tok = sampler_mod.sample(
+                logits[slot:slot + 1], r,
+                temperature=req.params.temperature,
+                top_k=req.params.top_k, top_p=req.params.top_p)
+            req.generated.append(int(tok[0]))
+            if req.t_first_token is None:
+                req.t_first_token = now
+            produced += 1
+            self.kv.advance(slot)
+            # RoPE prefetch hook: promote blocks around the decode
+            # position (async when the transfer worker is on)
+            if req.block_ids:
+                self._submit_prefetch(req.block_ids,
+                                      self.kv.slots[slot].length)
+        return produced
+
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One engine iteration (poll transfers -> admit -> budget-select
@@ -538,45 +689,10 @@ class ServingEngine:
         self.prefill_tokens_total += prefill_tokens
         produced = 0
         if decode_reqs:
-            # batched decode over the decoding slots
-            tokens = np.zeros((self.kv.n_slots,), np.int32)
-            for req in decode_reqs:
-                last = (req.generated[-1] if req.generated
-                        else req.prompt[-1])
-                tokens[req.slot] = last
-            # advance the stream once per step (per-request sampling keys
-            # are split below)
-            self._rng, _ = jax.random.split(self._rng)
-            if self.paged:
-                state = self.kv.decode_state(
-                    [r.slot for r in decode_reqs])
-                logits, new_state = self._decode(self.params, state,
-                                                 jnp.asarray(tokens))
-                self.kv.absorb(new_state)
-            else:
-                logits, self.kv.state = self._decode(
-                    self.params, self.kv.state, jnp.asarray(tokens))
-            now = time.monotonic()
-            by_slot = {r.slot: r for r in decode_reqs}
-            # per-request sampling (params differ per request)
-            for slot, req in sorted(by_slot.items()):
-                self._rng, r = jax.random.split(self._rng)
-                tok = sampler_mod.sample(
-                    logits[slot:slot + 1], r,
-                    temperature=req.params.temperature,
-                    top_k=req.params.top_k, top_p=req.params.top_p)
-                req.generated.append(int(tok[0]))
-                if req.t_first_token is None:
-                    req.t_first_token = now
-                produced += 1
-                self.kv.slots[slot].length += 1
-                # RoPE prefetch hook: promote blocks around the decode
-                # position (async when the transfer worker is on)
-                if req.block_ids:
-                    self._submit_prefetch(req.block_ids,
-                                          self.kv.slots[slot].length)
+            produced = (self._decode_fused(decode_reqs) if self.fused
+                        else self._decode_unfused(decode_reqs))
             # lengths already advanced; sync infos + finish bookkeeping
-            for slot, req in by_slot.items():
+            for req in decode_reqs:
                 if (req.finished()
                         or req.total_len >= self.ecfg.max_len - 1):
                     # retain_blocks (session continuation) balances the
@@ -633,6 +749,23 @@ class ServingEngine:
                 time.sleep(1e-3)       # idle: only fetches in flight
         return self.stats()
 
+    def recompiles(self) -> dict:
+        """Compiled-variant count per jitted step-loop closure (the jit
+        cache size).  Steady-state serving must hold every count
+        constant — growth means a shape or dtype is leaking into a
+        trace (the exact compile storm the fixed-width scatter and the
+        reused step buffers exist to prevent); a test gates on this."""
+        out = {}
+        for name, fn in (("decode", self._decode),
+                         ("fused_decode", self._fused_decode),
+                         ("prefill", self._prefill),
+                         ("prefill_chunk", self._prefill_chunk)):
+            try:
+                out[name] = int(fn._cache_size())
+            except Exception:          # jax-version-dependent private API
+                out[name] = -1
+        return out
+
     def stats(self) -> dict:
         out = {"scheduler": self.scheduler.stats(),
                "cache": self.manager.metrics(),
@@ -641,6 +774,8 @@ class ServingEngine:
                "idle_transfer_waits": self.idle_transfer_waits,
                "paged": self.paged,
                "chunked": self.chunked,
+               "fused": self.fused,
+               "recompiles": self.recompiles(),
                "prefill_chunks": self.prefill_chunks,
                "prefill_tokens": self.prefill_tokens_total,
                "max_step_prefill_tokens": self.max_step_prefill_tokens,
@@ -649,6 +784,8 @@ class ServingEngine:
                "shared_fetch_hits": self.shared_fetch_hits}
         if self.paged:
             out["allocator"] = self.kv.allocator.stats_dict()
+            out["decode_state_reuses"] = self.kv.state_reuses
+            out["decode_state_rebuilds"] = self.kv.state_rebuilds
         if self.worker is not None:
             out["async_transfers"] = self.worker.stats()
         return out

@@ -120,6 +120,15 @@ class _KVCacheBase:
         self.inject_block(slot, payload, 0)
         self.set_length(slot, length)
 
+    # -- decode bookkeeping -------------------------------------------------
+    def advance(self, slot: int) -> None:
+        """Post-decode length advance.  The decode step already advanced
+        the device-side length, so this only moves the host mirror — it
+        must NOT invalidate a cached device state (``PagedKVCache``
+        overrides the invalidating ``set_length`` path for exactly this
+        reason)."""
+        self.slots[slot].length += 1
+
 
 class SlotKVCache(_KVCacheBase):
     """Fixed decode slots over the model's contiguous DecodeState."""
@@ -226,6 +235,18 @@ class PagedKVCache(_KVCacheBase):
         self._mapped = [0] * n_slots           # contiguous mapped page count
         self.slots = [SlotInfo() for _ in range(n_slots)]
         self.block_pages: Dict[str, List[int]] = {}
+        # device-state cache for the fused step loop: in steady-state
+        # decode (same slot set, no table/length/pool mutation since the
+        # last step) the state returned by the previous fused decode is
+        # handed straight back — no table copy, no masking pass, no
+        # host->device upload.  ``state_version`` is bumped by every
+        # host-side mutation that would make the cached snapshot stale.
+        self.state_version = 0
+        self._cached_state: Optional[Dict] = None
+        self._cached_slots: Optional[frozenset] = None
+        self._cached_version = -1
+        self.state_reuses = 0      # decode_state served from the cache
+        self.state_rebuilds = 0    # full snapshot builds
 
     # ------------------------------------------------------------------
     # slot lifecycle
@@ -236,9 +257,11 @@ class PagedKVCache(_KVCacheBase):
         self.tables[slot, :] = 0
         self._mapped[slot] = 0
         self.slots[slot] = SlotInfo()
+        self.state_version += 1
 
     def set_length(self, slot: int, length: int) -> None:
         self.slots[slot].length = length
+        self.state_version += 1
 
     # ------------------------------------------------------------------
     # page mapping
@@ -266,6 +289,7 @@ class PagedKVCache(_KVCacheBase):
         for i, pid in enumerate(self._alloc(need - cur)):
             self.tables[slot, cur + i] = pid
         self._mapped[slot] = need
+        self.state_version += 1
 
     def ensure_private(self, slot: int, page_index: int) -> None:
         """Copy-on-write: give the slot a private copy of a shared page
@@ -279,6 +303,7 @@ class PagedKVCache(_KVCacheBase):
         self.tables[slot, page_index] = new
         self.allocator.deref(pid)
         self.allocator.note_cow_copy()
+        self.state_version += 1
 
     # ------------------------------------------------------------------
     # CoW prefix sharing with the cache manager
@@ -296,6 +321,7 @@ class PagedKVCache(_KVCacheBase):
             self.allocator.ref(pid, share=True)
             self.tables[slot, pi0 + j] = pid
         self._mapped[slot] = max(self._mapped[slot], pi0 + len(pids))
+        self.state_version += 1
         return len(pids) * self.page
 
     def register_block_pages(self, block_id: str, slot: int, start: int,
@@ -359,6 +385,7 @@ class PagedKVCache(_KVCacheBase):
         for key, data in items:
             self.pools[key] = _scatter_pool(self.pools[key], pid_arr,
                                             off_arr, data)
+        self.state_version += 1    # pool arrays replaced
 
     # ------------------------------------------------------------------
     # reads
@@ -392,8 +419,36 @@ class PagedKVCache(_KVCacheBase):
     # ------------------------------------------------------------------
     # decode-step interface
     # ------------------------------------------------------------------
-    def decode_state(self, decode_slots: Optional[Sequence[int]] = None
-                     ) -> Dict:
+    def _prepare_decode_pages(self, include: Optional[set]) -> None:
+        """Guarantee every decoding slot a private page for the incoming
+        token.  Page needs are gathered host-side first and satisfied in
+        ONE allocator call for the whole step (the per-slot
+        ``_ensure_pages`` loop paid one allocator lock round-trip per
+        request per step)."""
+        needs = []
+        for i, s in enumerate(self.slots):
+            if not s.active or (include is not None and i not in include):
+                continue
+            need = -(-(s.length + 1) // self.page) - self._mapped[i]
+            if need > 0:
+                needs.append((i, need))
+        if needs:
+            pids = self._alloc(sum(n for _, n in needs))
+            j = 0
+            for i, need in needs:
+                cur = self._mapped[i]
+                for t in range(need):
+                    self.tables[i, cur + t] = pids[j]
+                    j += 1
+                self._mapped[i] = cur + need
+            self.state_version += 1
+        for i, s in enumerate(self.slots):
+            if not s.active or (include is not None and i not in include):
+                continue
+            self.ensure_private(i, s.length // self.page)
+
+    def decode_state(self, decode_slots: Optional[Sequence[int]] = None,
+                     reuse: bool = False) -> Dict:
         """Snapshot for Model.decode_step_paged.  Guarantees every
         decoding slot has a private page mapped for the incoming token.
 
@@ -401,14 +456,27 @@ class PagedKVCache(_KVCacheBase):
         token-budget step: slots mid-chunked-prefill stay out): excluded
         rows get a zeroed block table and length 0, so the kernel's
         per-row KV write lands on the reserved scratch page instead of
-        the slot's real (possibly CoW-shared) prefix pages."""
+        the slot's real (possibly CoW-shared) prefix pages.
+
+        ``reuse=True`` (fused step loop): if the previous fused step's
+        returned state is cached, covers the same slot set, and no
+        host-side mutation happened since (``state_version``), hand it
+        straight back — the caller donates it into the step closure and
+        ``absorb`` re-caches the result.  Steady-state decode then runs
+        with zero per-step table copies or host->device uploads."""
         include = (None if decode_slots is None else set(decode_slots))
+        self._prepare_decode_pages(include)
+        if reuse and include is not None:
+            key = frozenset(include)
+            if (self._cached_state is not None
+                    and self._cached_slots == key
+                    and self._cached_version == self.state_version):
+                state = self._cached_state
+                self._cached_state = None  # donated into the closure
+                self.state_reuses += 1
+                return state
+        self.state_rebuilds += 1
         tables = self.tables
-        for i, s in enumerate(self.slots):
-            if not s.active or (include is not None and i not in include):
-                continue
-            self._ensure_pages(i, s.length + 1)
-            self.ensure_private(i, s.length // self.page)
         lengths = np.asarray(
             [s.length if s.active and (include is None or i in include)
              else 0 for i, s in enumerate(self.slots)], np.int32)
@@ -429,7 +497,19 @@ class PagedKVCache(_KVCacheBase):
         state["block_table"] = jnp.asarray(self.tables[slot:slot + 1])
         return state
 
-    def absorb(self, new_state: Dict) -> None:
-        """Take back the (donated) pool arrays after a decode step."""
+    def absorb(self, new_state: Dict,
+               decode_slots: Optional[Sequence[int]] = None) -> None:
+        """Take back the (donated) pool arrays after a decode step.
+
+        With ``decode_slots`` (fused path) the whole returned state —
+        pools, tables, per-row lengths already advanced on device — is
+        cached for ``decode_state(reuse=True)`` next step."""
         for key in self.pools:
             self.pools[key] = new_state[key]
+        self.state_version += 1    # pool arrays replaced
+        if decode_slots is not None:
+            self._cached_state = new_state
+            self._cached_slots = frozenset(decode_slots)
+            self._cached_version = self.state_version
+        else:
+            self._cached_state = None

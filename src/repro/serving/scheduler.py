@@ -28,6 +28,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.config import ModelConfig
 from repro.core import sizing
 from repro.serving.request import Phase, Request
@@ -61,6 +63,7 @@ class Scheduler:
         self.stragglers = 0
         self.transfer_events = 0
         self.async_restores = 0
+        self._step_bufs: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -124,6 +127,37 @@ class Scheduler:
                 grants.append((r, n))
                 budget -= n
         return decode, grants
+
+    def step_arrays(self, decode_reqs: List[Request],
+                    n_slots: int) -> Dict[str, np.ndarray]:
+        """Per-slot input tensors for the fused step closure — last
+        token, active mask, and sampling params — pre-built host-side in
+        ONE pass over the decode set.  The buffers are allocated once
+        and reused every step (the closure's input shapes depend only on
+        ``n_slots``, so the jit cache sees one signature)."""
+        bufs = self._step_bufs
+        if bufs is None or len(bufs["tokens"]) != n_slots:
+            bufs = self._step_bufs = {
+                "tokens": np.zeros((n_slots,), np.int32),
+                "active": np.zeros((n_slots,), np.int32),
+                "temperature": np.zeros((n_slots,), np.float32),
+                "top_k": np.zeros((n_slots,), np.int32),
+                "top_p": np.ones((n_slots,), np.float32),
+            }
+        bufs["tokens"][:] = 0
+        bufs["active"][:] = 0
+        bufs["temperature"][:] = 0.0
+        bufs["top_k"][:] = 0
+        bufs["top_p"][:] = 1.0
+        for r in decode_reqs:
+            s = r.slot
+            bufs["tokens"][s] = (r.generated[-1] if r.generated
+                                 else r.prompt[-1])
+            bufs["active"][s] = 1
+            bufs["temperature"][s] = r.params.temperature
+            bufs["top_k"][s] = r.params.top_k
+            bufs["top_p"][s] = r.params.top_p
+        return bufs
 
     def finish(self, req: Request) -> None:
         req.phase = Phase.DONE

@@ -209,7 +209,14 @@ def workload_sessions(workload: str, cfg: TraceConfig) -> List[List[Turn]]:
     through the live ``ServingEngine`` as multi-turn requests.  Salts
     match ``_make``, so session content is identical to the flat trace
     under the same ``TraceConfig``.
+
+    ``file:<path>`` workloads load a real ShareGPT/LMSYS JSON dump
+    (``traces/ingest.py``) instead of a synthetic generator; the first
+    ``cfg.n_sessions`` conversations replay block-for-block.
     """
+    if workload.startswith("file:"):
+        from repro.traces.ingest import file_sessions
+        return file_sessions(workload[len("file:"):], cfg.n_sessions)
     gen, salt = SESSION_GENERATORS[workload]
     if workload == "agentic":
         _TOOL_CTX_CACHE.clear()

@@ -159,6 +159,11 @@ class ServingReplayConfig:
     #                                     (xla off-TPU — several times
     #                                     faster replay wall-clock than
     #                                     the old interpret-mode default)
+    fused_step: bool = True             # fused jitted decode+sample step
+    #                                     closure (False: per-request
+    #                                     sampling A/B — greedy replay is
+    #                                     token-identical, so hit rates
+    #                                     must match either way)
     max_steps: int = 50_000
 
 
@@ -361,7 +366,8 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
         page_tokens=rcfg.page_tokens,
         prefill_chunk_tokens=rcfg.prefill_chunk_tokens,
         max_step_tokens=rcfg.max_step_tokens,
-        kernel_backend=rcfg.kernel_backend)
+        kernel_backend=rcfg.kernel_backend,
+        fused_step=rcfg.fused_step)
     return ServingEngine(cfg, ecfg)
 
 
