@@ -597,6 +597,74 @@ def steploop_benchmark(fast: bool = False, backend: str = None) -> None:
     run_steploop_table(batches=batches, backend=backend, steps=steps)
 
 
+def slo_benchmark(fast: bool = False, backend: str = None) -> None:
+    """Latency-under-load curve (``--table slo``): offered-QPS sweep
+    through the wall-clock ``ServingFrontend`` under open-loop Poisson
+    load, with and without SLO admission control.
+
+    The sweep runs the *real* front-end pump (admission, SLO queue,
+    streaming delivery) over the live engine under a virtual clock with
+    the per-step cost pinned to the fused-step latency measured by
+    ``--table steploop`` (≈5 ms at batch 16 on CPU-xla) — so the table
+    is deterministic and the rates are meaningful fractions of true
+    engine capacity.  ``max_step_tokens`` is capped to put the knee of
+    the curve inside the sweep.  At the top (overloaded) rate an
+    uncontrolled A/B (infinite budget) shows p99 TTFT breaching the
+    budget that the admission controller holds.
+    """
+    from repro.serving.frontend import ServingFrontend, SLOConfig, VirtualClock
+    from repro.traces.loadgen import offered_summary, trace_load
+    from repro.traces.serving_replay import ServingReplayConfig, build_engine
+
+    step_s = 5e-3                   # --table steploop fused batch-16 CPU-xla
+    budget_s = 0.150
+    rates = (8.0, 32.0, 64.0) if fast else (8.0, 16.0, 32.0, 64.0)
+    n_req = 40 if fast else 120
+    workload = "lmsys"
+    print(f"# SLO sweep — open-loop {workload} load through "
+          f"ServingFrontend (ttft budget {budget_s * 1e3:.0f} ms, "
+          f"virtual step {step_s * 1e3:.0f} ms)"
+          f"{' [fast]' if fast else ''}")
+
+    def run_rate(rate: float, budget: float) -> dict:
+        rcfg = ServingReplayConfig(workload=workload, n_sessions=8,
+                                   seed=0, async_transfers=False,
+                                   kernel_backend=backend,
+                                   max_step_tokens=32)
+        fe = ServingFrontend(
+            build_engine(rcfg), clock=VirtualClock(), step_time_s=step_s,
+            slo=SLOConfig(ttft_budget_s=budget, action="shed"))
+        arrivals = trace_load(workload, rate, n_requests=n_req, seed=7,
+                              n_sessions=8, max_turns=3)
+        fe.serve_schedule(arrivals)
+        fe.check_ledger()
+        st = fe.stats()
+        st["offered_qps"] = offered_summary(arrivals)["offered_qps"]
+        fe.stop()
+        return st
+
+    for rate in rates:
+        st = run_rate(rate, budget_s)
+        key = f"slo.qps{rate:g}"
+        _row(f"{key}.offered_qps", round(st["offered_qps"], 1))
+        _row(f"{key}.offered", st["offered"])
+        _row(f"{key}.done", st["done"])
+        _row(f"{key}.shed", st["shed"])
+        _row(f"{key}.goodput", st["goodput"])
+        _row(f"{key}.ttft_p50_ms", round(1e3 * st["ttft_p50"], 1))
+        _row(f"{key}.ttft_p99_ms", round(1e3 * st["ttft_p99"], 1))
+        _row(f"{key}.tbt_p50_ms", round(1e3 * st["tbt_p50"], 1))
+        _row(f"{key}.tbt_p99_ms", round(1e3 * st["tbt_p99"], 1))
+    # uncontrolled A/B at the top (shed-inducing) rate
+    st = run_rate(rates[-1], float("inf"))
+    key = f"slo.qps{rates[-1]:g}.uncontrolled"
+    _row(f"{key}.done", st["done"])
+    _row(f"{key}.shed", st["shed"])
+    _row(f"{key}.ttft_p50_ms", round(1e3 * st["ttft_p50"], 1))
+    _row(f"{key}.ttft_p99_ms", round(1e3 * st["ttft_p99"], 1))
+    _row("slo.budget_ms", round(1e3 * budget_s, 1))
+
+
 def kernel_benchmarks(backend: str = None, fast: bool = False) -> None:
     """Per-op kernel-backend microbenchmark (``--table kernels``).
 
@@ -694,7 +762,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--table", default=None,
                     help="run one: 1,3,4,5,6,7,8,9,micro,kernels,serving,"
-                         "ttft,replay,cluster,steploop")
+                         "ttft,replay,cluster,steploop,slo")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serving benchmark: paged block-table KV path "
@@ -750,6 +818,8 @@ def main() -> None:
         cluster_benchmark(fast=args.fast, backend=args.backend)
     if sel == "steploop":
         steploop_benchmark(fast=args.fast, backend=args.backend)
+    if sel == "slo":
+        slo_benchmark(fast=args.fast, backend=args.backend)
     print(f"# done in {time.time() - t0:.1f}s")
 
 

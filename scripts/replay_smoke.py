@@ -7,7 +7,9 @@ asserting every turn still completes and the redispatch/re-prefill
 accounting is consistent — then once more with the fleet-shared tier 4
 bound, asserting cross-replica imports actually happen — then a smoke
 run of the fused step-loop microbench, whose host-overhead/kernel-time
-ratio lands in the summary line.
+ratio lands in the summary line — then a few seconds of *real-clock*
+serving through the thread-pumped ``ServingFrontend`` at low open-loop
+QPS, asserting goodput == offered and surfacing the measured p99 TTFT.
 
 The smoke also enforces a wall-clock budget (``REPLAY_SMOKE_BUDGET_S``,
 0/unset disables): under the compiled ``xla`` kernel backend the whole
@@ -112,6 +114,56 @@ def steploop_smoke() -> float:
     return r.ratio
 
 
+def frontend_smoke() -> float:
+    """A few seconds of *real-clock* serving through the thread-pumped
+    ``ServingFrontend`` at a low Poisson rate: no admission pressure, so
+    goodput must equal offered (nothing shed, nothing leaked), and the
+    measured p99 TTFT lands in the summary line."""
+    from repro.serving.frontend import ServingFrontend
+    from repro.serving.request import SamplingParams
+    from repro.traces.loadgen import trace_load
+    from repro.traces.serving_replay import ServingReplayConfig, build_engine
+
+    fe = ServingFrontend(build_engine(ServingReplayConfig(
+        workload="agentic", policy="bayesian", n_sessions=2,
+        async_transfers=False)))
+    arrivals = trace_load("agentic", 6.0, duration_s=2.0, seed=0,
+                          n_sessions=2, max_turns=2)
+    # warm up compilation inline (arrival-shaped prompts, concurrent so
+    # batched decode variants compile too) so the timed phase measures
+    # serving, not jit
+    n_warm = 2
+    for k in range(n_warm):
+        fe.submit([k + 1] * len(arrivals[k].prompt),
+                  params=SamplingParams(max_new_tokens=2))
+    while fe.in_flight() > 0:
+        fe.pump_once()
+    fe.start()
+    t0 = time.monotonic()
+    for a in arrivals:
+        dt = (t0 + a.t) - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        fe.submit(list(a.prompt),
+                  params=SamplingParams(max_new_tokens=a.max_new),
+                  session_id=a.session_id, arrival_t=t0 + a.t,
+                  block_types=list(a.block_types), tool=a.tool,
+                  retain_blocks=not a.last_turn)
+    fe.stop(drain=True, timeout=60.0)
+    fe.check_ledger()
+    st = fe.stats()
+    offered = len(arrivals) + n_warm       # + the warm-up requests
+    assert st["offered"] == offered
+    assert st["shed"] == 0 and st["in_flight"] == 0
+    assert st["goodput"] == st["offered"], (
+        f"goodput {st['goodput']} != offered {st['offered']} "
+        f"(shed {st['shed']}, done {st['done']})")
+    print(f"frontend smoke ok: {st['done']} served at real clock, "
+          f"ttft p99 {st['ttft_p99'] * 1e3:.0f}ms, "
+          f"tbt p99 {st['tbt_p99'] * 1e3:.1f}ms")
+    return st["ttft_p99"]
+
+
 def main() -> None:
     budget_s = float(os.environ.get("REPLAY_SMOKE_BUDGET_S", "0"))
     t0 = time.perf_counter()
@@ -126,6 +178,9 @@ def main() -> None:
     t3 = time.perf_counter()
     steploop_ratio = steploop_smoke()
     t_steploop = time.perf_counter() - t3
+    t4 = time.perf_counter()
+    frontend_p99 = frontend_smoke()
+    t_frontend = time.perf_counter() - t4
     elapsed = time.perf_counter() - t0
     # the tier-1 pytest step exports its wall time (TIER1_WALL_S) so the
     # job log carries one consolidated timing line
@@ -134,6 +189,8 @@ def main() -> None:
           f"single={t_single:.1f}s cluster={t_cluster:.1f}s "
           f"shared={t_shared:.1f}s steploop={t_steploop:.1f}s "
           f"steploop_host_kernel_ratio={steploop_ratio:.2f} "
+          f"frontend={t_frontend:.1f}s "
+          f"frontend_ttft_p99_ms={frontend_p99 * 1e3:.0f} "
           f"total={elapsed:.1f}s "
           f"budget={budget_s:.0f}s" + (" (disabled)" if not budget_s else ""))
     print(f"pytest -m 'not slow' wall: "

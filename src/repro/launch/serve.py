@@ -14,7 +14,12 @@ properties:
     in-flight requests re-dispatch to a successor replica and lost KV
     blocks are re-prefilled — the paper's graceful-degradation story;
   * elastic scale-out (``--add-replica``): a replica joins mid-run,
-    remapping ~1/n of sessions.
+    remapping ~1/n of sessions;
+  * wall-clock serving (``--frontend``): the thread-pumped
+    ``ServingFrontend`` under open-loop Poisson load from
+    ``traces/loadgen.py``, with SLO-aware admission
+    (``--qps``/``--duration``/``--ttft-budget-ms``/``--slo-action``)
+    and a goodput/shed/TTFT report.
 
 See ``docs/SERVING.md`` for the operations guide.
 """
@@ -34,6 +39,49 @@ from repro.serving.cluster import (ROUTERS, ReplicaCluster)  # noqa: F401
 #                                   of the pre-promotion location)
 
 
+def _serve_frontend(args) -> int:
+    """Real-clock open-loop serving: background pump thread + Poisson
+    schedule, SLO admission, goodput/TTFT report."""
+    from repro.serving.frontend import ServingFrontend, SLOConfig
+    from repro.traces.loadgen import offered_summary, trace_load
+    from repro.traces.serving_replay import ServingReplayConfig, build_engine
+
+    rcfg = ServingReplayConfig(workload=args.workload, seed=args.seed,
+                               policy=args.policy, async_transfers=False)
+    engine = build_engine(rcfg)
+    budget = (args.ttft_budget_ms / 1e3 if args.ttft_budget_ms > 0
+              else float("inf"))
+    fe = ServingFrontend(engine,
+                         slo=SLOConfig(ttft_budget_s=budget,
+                                       action=args.slo_action))
+    arrivals = trace_load(args.workload, args.qps,
+                          duration_s=args.duration, seed=args.seed)
+    print(f"offered: {offered_summary(arrivals)}")
+    fe.start()
+    t0 = time.monotonic()
+    for a in arrivals:
+        dt = (t0 + a.t) - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        fe.submit(list(a.prompt),
+                  params=SamplingParams(max_new_tokens=a.max_new),
+                  session_id=a.session_id, arrival_t=t0 + a.t,
+                  block_types=list(a.block_types), tool=a.tool,
+                  retain_blocks=not a.last_turn)
+    fe.stop(drain=True)
+    fe.check_ledger()
+    st = fe.stats()
+    print(f"served {st['done']}/{st['offered']} requests "
+          f"({st['shed']} shed, goodput {st['goodput']}) in "
+          f"{time.monotonic() - t0:.1f}s")
+    print(f"ttft p50/p99: {st['ttft_p50'] * 1e3:.1f}/"
+          f"{st['ttft_p99'] * 1e3:.1f} ms  "
+          f"tbt p50/p99: {st['tbt_p50'] * 1e3:.1f}/"
+          f"{st['tbt_p99'] * 1e3:.1f} ms  "
+          f"est step: {st['est_step_s'] * 1e3:.2f} ms")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -49,7 +97,25 @@ def main(argv=None) -> int:
                     help="scale out by one replica mid-run")
     ap.add_argument("--policy", default="bayesian",
                     choices=["bayesian", "ema", "lru"])
+    ap.add_argument("--frontend", action="store_true",
+                    help="wall-clock ServingFrontend under open-loop "
+                         "Poisson load (real threads, real clock)")
+    ap.add_argument("--workload", default="lmsys",
+                    help="loadgen workload (sharegpt/lmsys/agentic/"
+                         "file:<path>)")
+    ap.add_argument("--qps", type=float, default=8.0,
+                    help="offered Poisson rate for --frontend")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="load duration in seconds for --frontend")
+    ap.add_argument("--ttft-budget-ms", type=float, default=0.0,
+                    help="SLO TTFT budget (0 = no admission control)")
+    ap.add_argument("--slo-action", default="shed",
+                    choices=["shed", "queue"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.frontend:
+        return _serve_frontend(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -3,6 +3,9 @@ from repro.serving.cluster import (LeastLoadedRouter, ReplicaCluster,
                                    RoundRobinRouter, RoutingPolicy,
                                    SessionAffinityRouter, make_router)
 from repro.serving.engine import ServingEngine, EngineConfig
+from repro.serving.frontend import (AdmissionSnapshot, ServingFrontend,
+                                    SLOConfig, StreamHandle, VirtualClock,
+                                    admission_decision, projected_ttft_s)
 from repro.serving.kvcache import PagedKVCache, SlotKVCache
 from repro.serving.request import Request, SamplingParams, Phase
 from repro.serving.scheduler import Scheduler, SchedulerConfig

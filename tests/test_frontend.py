@@ -1,0 +1,265 @@
+"""Wall-clock serving front-end (``serving/frontend.py``) under a
+deterministic virtual clock, plus a real-threaded soak (``slow``).
+
+The deterministic tests drive the pump inline (``run_for`` /
+``serve_schedule``) with a ``VirtualClock`` and a pinned per-step cost,
+so every latency metric is an exact function of the schedule — no
+timing races, byte-identical across runs.
+"""
+import threading
+
+import pytest
+
+from repro.serving.frontend import (ADMIT, QUEUE, SHED, AdmissionSnapshot,
+                                    ServingFrontend, SLOConfig, VirtualClock,
+                                    admission_decision, projected_ttft_s)
+from repro.serving.request import SamplingParams
+from repro.traces.loadgen import offered_summary, trace_load
+from repro.traces.serving_replay import ServingReplayConfig, build_engine
+
+
+def _frontend(*, budget=float("inf"), action="shed", max_queue=64,
+              max_step_tokens=256, step_time_s=5e-3, workload="lmsys"):
+    rcfg = ServingReplayConfig(workload=workload, n_sessions=4, seed=0,
+                               async_transfers=False,
+                               max_step_tokens=max_step_tokens)
+    return ServingFrontend(
+        build_engine(rcfg), clock=VirtualClock(), step_time_s=step_time_s,
+        slo=SLOConfig(ttft_budget_s=budget, action=action,
+                      max_queue=max_queue))
+
+
+def _params(n=4):
+    return SamplingParams(max_new_tokens=n)
+
+
+# ---------------------------------------------------------------------------
+# streaming callbacks + ledger
+# ---------------------------------------------------------------------------
+def test_stream_callbacks_once_per_token_in_order():
+    fe = _frontend()
+    events = []
+    done_calls = []
+    h = fe.submit([1, 2, 3, 4], params=_params(5), session_id="s0",
+                  on_token=lambda t, i: events.append((i, t)),
+                  on_done=lambda hh: done_calls.append(hh))
+    fe.run_for(n_steps=40)
+    assert h.status == "done"
+    assert len(h.tokens) == 5
+    # indices are 0..n-1 in order, one callback per token
+    assert [i for i, _ in events] == list(range(5))
+    assert [t for _, t in events] == h.tokens
+    assert done_calls == [h]
+    assert h.ttft is not None and h.ttft > 0
+    # TBT gaps are exact multiples of the pinned step cost
+    assert all(abs(g - 5e-3) < 1e-12 for g in h.tbts)
+    fe.check_ledger()
+    fe.stop()
+
+
+def test_concurrent_submission_no_leak_no_double_completion():
+    """Submissions racing in from many threads all reach a terminal
+    state exactly once (on_done counted per handle)."""
+    fe = _frontend()
+    counts = {}
+    lock = threading.Lock()
+
+    def on_done(h):
+        with lock:
+            counts[id(h)] = counts.get(id(h), 0) + 1
+
+    handles = []
+
+    def submitter(k):
+        for j in range(4):
+            h = fe.submit([k * 16 + j + 1] * 6, params=_params(3),
+                          session_id=f"s{k}", on_done=on_done)
+            with lock:
+                handles.append(h)
+
+    threads = [threading.Thread(target=submitter, args=(k,))
+               for k in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert fe.stats()["offered"] == 24
+    fe.run_for(n_steps=400)
+    fe.check_ledger()
+    st = fe.stats()
+    assert st["done"] == 24 and st["shed"] == 0 and st["in_flight"] == 0
+    assert all(c == 1 for c in counts.values()) and len(counts) == 24
+    assert all(len(h.tokens) == 3 for h in handles)
+    fe.stop()
+
+
+def test_stop_drains_in_flight_then_rejects_submissions():
+    fe = _frontend()
+    hs = [fe.submit([i + 1] * 8, params=_params(6), session_id=f"s{i}")
+          for i in range(5)]
+    fe.run_for(n_steps=2)                       # partially complete
+    assert fe.in_flight() > 0
+    fe.stop(drain=True)                         # inline drain
+    assert all(h.status == "done" for h in hs)
+    assert fe.in_flight() == 0
+    fe.check_ledger()
+    with pytest.raises(RuntimeError):
+        fe.submit([1, 2, 3])
+
+
+def test_run_for_duration_bound_on_virtual_clock():
+    fe = _frontend(step_time_s=1e-2)
+    fe.submit([1] * 4, params=_params(50))
+    t0 = fe.clock.monotonic()
+    fe.run_for(duration_s=0.1)
+    assert fe.clock.monotonic() - t0 >= 0.1
+    assert fe.clock.monotonic() - t0 < 0.1 + 2e-2
+    fe.stop()
+
+
+# ---------------------------------------------------------------------------
+# open-loop schedule + determinism
+# ---------------------------------------------------------------------------
+def _run_schedule(budget=float("inf"), action="shed", rate=100.0, n=30):
+    fe = _frontend(budget=budget, action=action, max_step_tokens=32)
+    arrivals = trace_load("lmsys", rate, n_requests=n, seed=5,
+                          n_sessions=4, max_turns=2)
+    fe.serve_schedule(arrivals)
+    fe.check_ledger()
+    st = fe.stats()
+    fe.stop()
+    return st, arrivals
+
+
+def test_serve_schedule_accounting_sums_to_offered():
+    st, arrivals = _run_schedule()
+    assert st["offered"] == len(arrivals)
+    assert st["offered"] == st["done"] + st["shed"]
+    assert st["goodput"] <= st["done"]
+    assert st["in_flight"] == 0
+
+
+def test_virtual_clock_metrics_byte_identical_across_runs():
+    a, _ = _run_schedule(budget=0.15)
+    b, _ = _run_schedule(budget=0.15)
+    assert repr(a) == repr(b)
+
+
+def test_admission_holds_p99_while_uncontrolled_breaches():
+    budget = 0.15
+    free, _ = _run_schedule(budget=float("inf"))
+    held, _ = _run_schedule(budget=budget)
+    assert free["ttft_p99"] > budget          # open loop overload breaches
+    assert held["ttft_p99"] <= budget         # admission sheds to hold SLO
+    assert held["shed"] > 0
+    assert held["goodput"] == held["done"]    # everything served met SLO
+
+
+def test_queue_mode_bounded_queue():
+    st, _ = _run_schedule(budget=0.1, action="queue")
+    assert st["queued_peak"] <= SLOConfig().max_queue
+    assert st["offered"] == st["done"] + st["shed"]
+
+
+def test_loadgen_schedule_deterministic_and_monotone():
+    a = trace_load("lmsys", 50.0, n_requests=25, seed=9)
+    b = trace_load("lmsys", 50.0, n_requests=25, seed=9)
+    assert a == b
+    ts = [x.t for x in a]
+    assert ts == sorted(ts)
+    # per-session turn indices strictly increase in schedule order
+    seen = {}
+    for x in a:
+        assert x.turn == seen.get(x.session_id, -1) + 1
+        seen[x.session_id] = x.turn
+    s = offered_summary(a)
+    assert s["requests"] == 25 and s["offered_qps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# admission decisions are pure functions of observable state
+# ---------------------------------------------------------------------------
+def _snap(pending=0, queued=0, qlen=0, live=0, free=8, step=5e-3):
+    return AdmissionSnapshot(pending_prefill_tokens=pending,
+                             queued_prefill_tokens=queued, queue_len=qlen,
+                             live_decodes=live, free_slots=free,
+                             est_step_s=step)
+
+
+def test_admission_infinite_budget_always_admits():
+    slo = SLOConfig()
+    snap = _snap(pending=10**6, qlen=10**3, live=10**3)
+    assert admission_decision(10**4, snap, slo, 32) == ADMIT
+
+
+def test_admission_idle_system_never_sheds():
+    slo = SLOConfig(ttft_budget_s=1e-9)        # absurdly tight budget
+    assert admission_decision(10**6, _snap(), slo, 32) == ADMIT
+
+
+def test_admission_sheds_or_queues_on_projected_breach():
+    slo_shed = SLOConfig(ttft_budget_s=0.05, action="shed")
+    slo_q = SLOConfig(ttft_budget_s=0.05, action="queue", max_queue=2)
+    loaded = _snap(pending=4096, live=4)
+    assert projected_ttft_s(64, loaded, 32) > 0.05
+    assert admission_decision(64, loaded, slo_shed, 32) == SHED
+    assert admission_decision(64, loaded, slo_q, 32) == QUEUE
+    full_q = _snap(pending=4096, live=4, qlen=2)
+    assert admission_decision(64, full_q, slo_q, 32) == SHED
+
+
+def test_admission_admits_within_budget():
+    slo = SLOConfig(ttft_budget_s=1.0, action="shed")
+    light = _snap(pending=32, live=1)
+    assert projected_ttft_s(16, light, 32) <= 1.0
+    assert admission_decision(16, light, slo, 32) == ADMIT
+
+
+# ---------------------------------------------------------------------------
+# real-threaded soak (true concurrency)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_soak_real_threads_no_drops_no_leaks_stable_recompiles():
+    """Background pump thread + real-clock submitter at moderate QPS:
+    zero dropped callbacks, zero leaked requests, recompile counts
+    stable after warm-up."""
+    import time as _time
+
+    rcfg = ServingReplayConfig(workload="lmsys", n_sessions=6, seed=0,
+                               async_transfers=False)
+    engine = build_engine(rcfg)
+    fe = ServingFrontend(engine)
+
+    # warm-up inline: trigger every compilation path before measuring
+    warm = [fe.submit([i + 1] * 12, params=_params(4), session_id=f"w{i}")
+            for i in range(3)]
+    while fe.in_flight() > 0:
+        fe.pump_once()
+    assert all(h.status == "done" for h in warm)
+    recompiles_after_warmup = engine.recompiles()
+
+    fe.start()
+    arrivals = trace_load("lmsys", 12.0, duration_s=3.0, seed=11,
+                          n_sessions=6, max_turns=2)
+    t0 = _time.monotonic()
+    handles = []
+    for a in arrivals:
+        dt = (t0 + a.t) - _time.monotonic()
+        if dt > 0:
+            _time.sleep(dt)
+        h = fe.submit(list(a.prompt),
+                      params=SamplingParams(max_new_tokens=a.max_new),
+                      session_id=a.session_id, arrival_t=t0 + a.t,
+                      block_types=list(a.block_types), tool=a.tool,
+                      retain_blocks=not a.last_turn)
+        handles.append(h)
+    fe.stop(drain=True, timeout=120.0)
+    fe.check_ledger()
+    st = fe.stats()
+    assert st["offered"] == len(arrivals) + len(warm)
+    assert st["done"] == len(arrivals) + len(warm) and st["shed"] == 0
+    # zero dropped callbacks: every generated token was delivered
+    for h in handles:
+        assert h.status == "done"
+        assert h.tokens == list(h.request.generated)
+    assert engine.recompiles() == recompiles_after_warmup

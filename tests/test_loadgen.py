@@ -1,0 +1,163 @@
+"""Property tests (hypothesis) for the open-loop Poisson load
+generator and the SLO admission pure functions.
+
+Everything here is pure (no engine, no JAX): the Poisson process is a
+function of ``(rate, seed)`` and ``admission_decision`` of an
+``AdmissionSnapshot`` — so the properties hold with no timing races.
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.frontend import (ADMIT, QUEUE, SHED, AdmissionSnapshot,
+                                    SLOConfig, admission_decision,
+                                    projected_ttft_s)
+from repro.traces.loadgen import PoissonLoadGen
+
+RATES = st.floats(min_value=0.1, max_value=500.0,
+                  allow_nan=False, allow_infinity=False)
+SEEDS = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Poisson process properties
+# ---------------------------------------------------------------------------
+@given(rate=RATES, seed=SEEDS)
+@settings(max_examples=25, deadline=None)
+def test_seeded_reproducibility(rate, seed):
+    a = PoissonLoadGen(rate, seed=seed).arrival_times(n=50)
+    b = PoissonLoadGen(rate, seed=seed).arrival_times(n=50)
+    assert a == b
+
+
+@given(rate=RATES, seed=SEEDS)
+@settings(max_examples=25, deadline=None)
+def test_monotone_timestamps(rate, seed):
+    ts = PoissonLoadGen(rate, seed=seed).arrival_times(n=100)
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert all(t > 0 for t in ts)
+
+
+@given(rate=st.floats(min_value=1.0, max_value=100.0), seed=SEEDS)
+@settings(max_examples=15, deadline=None)
+def test_mean_interarrival_close_to_reciprocal_rate(rate, seed):
+    n = 4000
+    gaps = PoissonLoadGen(rate, seed=seed).interarrivals(n)
+    mean = float(gaps.mean())
+    # CLT tolerance: exponential sd == mean, so sample mean is within
+    # ~5 sigma/sqrt(n) of 1/rate essentially always
+    assert abs(mean - 1.0 / rate) < 5.0 / (rate * math.sqrt(n))
+
+
+@given(rate=RATES, seed=SEEDS,
+       duration=st.floats(min_value=0.01, max_value=10.0))
+@settings(max_examples=25, deadline=None)
+def test_duration_mode_bounds_all_arrivals(rate, seed, duration):
+    ts = PoissonLoadGen(rate, seed=seed).arrival_times(duration_s=duration)
+    assert all(0 < t < duration for t in ts)
+
+
+def test_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        PoissonLoadGen(0.0)
+    with pytest.raises(ValueError):
+        PoissonLoadGen(10.0).arrival_times()
+    with pytest.raises(ValueError):
+        PoissonLoadGen(10.0).arrival_times(n=5, duration_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission properties
+# ---------------------------------------------------------------------------
+SNAPS = st.builds(
+    AdmissionSnapshot,
+    pending_prefill_tokens=st.integers(min_value=0, max_value=10**6),
+    queued_prefill_tokens=st.integers(min_value=0, max_value=10**6),
+    queue_len=st.integers(min_value=0, max_value=10**4),
+    live_decodes=st.integers(min_value=0, max_value=10**3),
+    free_slots=st.integers(min_value=0, max_value=256),
+    est_step_s=st.floats(min_value=1e-6, max_value=1.0))
+SLOS = st.builds(
+    SLOConfig,
+    ttft_budget_s=st.one_of(st.just(float("inf")),
+                            st.floats(min_value=1e-4, max_value=10.0)),
+    action=st.sampled_from([SHED, QUEUE]),
+    max_queue=st.integers(min_value=0, max_value=128))
+PROMPTS = st.integers(min_value=1, max_value=10**4)
+BUDGETS = st.integers(min_value=1, max_value=1024)
+
+
+@given(prompt=PROMPTS, snap=SNAPS, slo=SLOS, mst=BUDGETS)
+@settings(max_examples=200, deadline=None)
+def test_decision_is_deterministic_and_closed(prompt, snap, slo, mst):
+    d1 = admission_decision(prompt, snap, slo, mst)
+    d2 = admission_decision(prompt, snap, slo, mst)
+    assert d1 == d2
+    assert d1 in (ADMIT, QUEUE, SHED)
+
+
+@given(prompt=PROMPTS, snap=SNAPS, mst=BUDGETS)
+@settings(max_examples=100, deadline=None)
+def test_infinite_budget_always_admits(prompt, snap, mst):
+    assert admission_decision(prompt, snap, SLOConfig(), mst) == ADMIT
+
+
+@given(prompt=PROMPTS, slo=SLOS, mst=BUDGETS,
+       step=st.floats(min_value=1e-6, max_value=1.0))
+@settings(max_examples=100, deadline=None)
+def test_never_sheds_below_rate_floor(prompt, slo, mst, step):
+    """An idle system (no backlog, empty queue, no live decodes) always
+    admits — shedding can never push throughput below the sequential
+    service rate, whatever the budget."""
+    idle = AdmissionSnapshot(pending_prefill_tokens=0,
+                             queued_prefill_tokens=0, queue_len=0,
+                             live_decodes=0, free_slots=1, est_step_s=step)
+    assert admission_decision(prompt, idle, slo, mst) == ADMIT
+
+
+@given(prompt=PROMPTS, snap=SNAPS, mst=BUDGETS,
+       budget=st.floats(min_value=1e-4, max_value=10.0),
+       max_queue=st.integers(min_value=0, max_value=64))
+@settings(max_examples=200, deadline=None)
+def test_queue_is_bounded(prompt, snap, mst, budget, max_queue):
+    """QUEUE is only ever returned while the queue has room — the
+    front-end queue length can never exceed ``max_queue``."""
+    slo = SLOConfig(ttft_budget_s=budget, action=QUEUE,
+                    max_queue=max_queue)
+    if admission_decision(prompt, snap, slo, mst) == QUEUE:
+        assert snap.queue_len < max_queue
+
+
+@given(prompt=PROMPTS, snap=SNAPS, mst=BUDGETS,
+       budget=st.floats(min_value=1e-4, max_value=10.0))
+@settings(max_examples=200, deadline=None)
+def test_admit_iff_projection_within_budget_under_load(prompt, snap, mst,
+                                                       budget):
+    """On a non-idle system the admit/deny boundary is exactly the
+    projected-TTFT-vs-budget comparison (pure, no hidden state)."""
+    slo = SLOConfig(ttft_budget_s=budget, action=SHED)
+    idle = (snap.pending_prefill_tokens == 0 and snap.queue_len == 0
+            and snap.live_decodes == 0)
+    decision = admission_decision(prompt, snap, slo, mst)
+    if idle:
+        assert decision == ADMIT
+    elif projected_ttft_s(prompt, snap, mst) <= budget:
+        assert decision == ADMIT
+    else:
+        assert decision == SHED
+
+
+@given(prompt=PROMPTS, snap=SNAPS, mst=BUDGETS)
+@settings(max_examples=100, deadline=None)
+def test_projection_monotone_in_backlog(prompt, snap, mst):
+    """More backlog never projects a *smaller* TTFT."""
+    heavier = AdmissionSnapshot(
+        pending_prefill_tokens=snap.pending_prefill_tokens + 1000,
+        queued_prefill_tokens=snap.queued_prefill_tokens,
+        queue_len=snap.queue_len, live_decodes=snap.live_decodes,
+        free_slots=snap.free_slots, est_step_s=snap.est_step_s)
+    assert (projected_ttft_s(prompt, heavier, mst)
+            >= projected_ttft_s(prompt, snap, mst))

@@ -42,9 +42,9 @@ def test_decode_matches_teacher_forcing(arch):
         params, {"tokens": jnp.asarray([toks[:k]], jnp.int32)})
     if "k" in state or "latent" in state:
         state = grow(state, 64)
+    dstep = jax.jit(m.decode_step)      # one wrapper: trace/compile once
     for t in toks[k:]:
-        lg, state = jax.jit(m.decode_step)(
-            params, state, jnp.asarray([t], jnp.int32))
+        lg, state = dstep(params, state, jnp.asarray([t], jnp.int32))
     np.testing.assert_allclose(np.asarray(lg, np.float32),
                                np.asarray(lg_ref, np.float32),
                                rtol=0.05, atol=0.15)

@@ -29,12 +29,22 @@ def setup():
     return cfg, model, params, data
 
 
+_STEP_FNS = {}
+
+
 def _run(model, params, data, steps, n_micro=1, compress=False,
          start=0, opt_state=None):
-    step_fn = jax.jit(train_mod.make_train_step(
-        model, adamw=AdamWConfig(lr=1e-3, total_steps=100,
-                                 warmup_steps=2),
-        n_micro=n_micro, grad_compress=compress))
+    # memoize the jitted step per (model, n_micro, compress): every
+    # fresh jax.jit(make_train_step(...)) wrapper re-traces, and the
+    # compile dominated this module's wall clock
+    key = (id(model), n_micro, compress)
+    step_fn = _STEP_FNS.get(key)
+    if step_fn is None:
+        step_fn = jax.jit(train_mod.make_train_step(
+            model, adamw=AdamWConfig(lr=1e-3, total_steps=100,
+                                     warmup_steps=2),
+            n_micro=n_micro, grad_compress=compress))
+        _STEP_FNS[key] = step_fn
     opt_state = opt_mod.init_state(params) if opt_state is None \
         else opt_state
     losses = []
