@@ -369,6 +369,59 @@ def cluster_benchmark(fast: bool = False, backend: str = None) -> None:
         _row(f"{key}.wall_s", round(j.wall_s, 1))
 
 
+def segments_benchmark(fast: bool = False, backend: str = None) -> None:
+    """Segment-reuse A/B (``--table segments``): every workload replayed
+    through the live engine twice on the same seeded trace — content-
+    segment index on (mid-prompt blocks resumable beyond the contiguous
+    radix prefix) vs the monolithic-radix baseline
+    (``EngineConfig(segment_reuse=False)``).
+
+    The headline cell is ShareGPT: its sessions truncate conversation
+    history (oldest turns dropped), shifting the surviving turn blocks
+    left by whole blocks — a radix tree loses everything past the first
+    shifted block, while the content-segment index recovers the blocks
+    at their new positions (position-independent reuse; resumed KV
+    carries the RoPE/context of its original position — see
+    docs/EVALUATION.md §7).  ``delta_pts`` is the engine hit-rate lift
+    in percentage points; ``lookup_us_per_call`` is the measured
+    segment-index probe cost the lift pays for.
+    """
+    from repro.kernels.backend import resolve_backend
+    from repro.traces.serving_replay import (ServingReplayConfig,
+                                             run_serving_replay)
+    print("# Segments — segment-index vs monolithic-radix A/B"
+          + (" [fast]" if fast else "")
+          + f" [kernel backend: {resolve_backend(backend)}]")
+    n_sessions = 6 if fast else 12
+    max_turns = 4 if fast else 6
+    for wl in ("sharegpt", "lmsys", "agentic"):
+        rows = {}
+        for seg in (False, True):
+            rows[seg] = run_serving_replay(ServingReplayConfig(
+                workload=wl, n_sessions=n_sessions, max_turns=max_turns,
+                kernel_backend=backend, segment_reuse=seg))
+        off, on = rows[False], rows[True]
+        key = f"segments.{wl}"
+        _row(f"{key}.hit_pct_radix", round(100 * off.engine_hit_rate, 1))
+        _row(f"{key}.hit_pct_segments", round(100 * on.engine_hit_rate, 1))
+        _row(f"{key}.delta_pts",
+             round(100 * (on.engine_hit_rate - off.engine_hit_rate), 1),
+             ">=5" if wl == "sharegpt" else None)
+        _row(f"{key}.reuse_pct_radix", round(100 * off.reuse_rate, 1))
+        _row(f"{key}.reuse_pct_segments", round(100 * on.reuse_rate, 1))
+        _row(f"{key}.segment_hit_blocks", on.segment_hit_blocks)
+        _row(f"{key}.segment_share_hits", on.segment_share_hits)
+        _row(f"{key}.segment_inject_hits", on.segment_inject_hits)
+        _row(f"{key}.segment_lookups", on.segment_lookups)
+        us = (1e6 * on.segment_lookup_s / on.segment_lookups
+              if on.segment_lookups else 0.0)
+        _row(f"{key}.lookup_us_per_call", round(us, 1))
+        _row(f"{key}.ttft_p95_ms_radix", round(1e3 * off.ttft_p95, 1))
+        _row(f"{key}.ttft_p95_ms_segments", round(1e3 * on.ttft_p95, 1))
+        _row(f"{key}.wall_s",
+             round(off.wall_s + on.wall_s, 1))
+
+
 def micro_benchmarks() -> None:
     """System micro-benchmarks backing the paper's latency claims."""
     from repro.core.bayesian import BayesianReusePredictor
@@ -762,7 +815,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--table", default=None,
                     help="run one: 1,3,4,5,6,7,8,9,micro,kernels,serving,"
-                         "ttft,replay,cluster,steploop,slo")
+                         "ttft,replay,cluster,segments,steploop,slo")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serving benchmark: paged block-table KV path "
@@ -816,6 +869,8 @@ def main() -> None:
         replay_benchmark(fast=args.fast, backend=args.backend)
     if sel == "cluster":
         cluster_benchmark(fast=args.fast, backend=args.backend)
+    if sel == "segments":
+        segments_benchmark(fast=args.fast, backend=args.backend)
     if sel == "steploop":
         steploop_benchmark(fast=args.fast, backend=args.backend)
     if sel == "slo":

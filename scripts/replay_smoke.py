@@ -25,7 +25,7 @@ import time
 
 from repro.kernels.backend import default_backend
 from repro.traces.serving_replay import (ClusterReplayConfig,
-                                         ServingReplayConfig,
+                                         ServingReplayConfig, build_engine,
                                          run_cluster_replay,
                                          run_serving_replay)
 
@@ -43,6 +43,47 @@ def single_engine_smoke() -> None:
           f"hit {100 * r.engine_hit_rate:.1f}%, "
           f"reuse {100 * r.reuse_rate:.1f}%, "
           f"wall {r.wall_s:.1f}s")
+
+
+def segment_smoke() -> int:
+    """Segment-granular prefix reuse through the live engine: two
+    ShareGPT-shaped sessions whose prompts diverge mid-prompt — the
+    second rewrites block 0 (the history-truncation shape: surviving
+    turn blocks shifted to new positions) but keeps blocks 1..3 — must
+    resume at least one mid-prompt segment past the divergence (CoW
+    share or tier fetch), which the radix prefix cannot see at all."""
+    import numpy as np
+    from repro.serving.request import SamplingParams
+    eng = build_engine(ServingReplayConfig(
+        workload="sharegpt", policy="bayesian", n_sessions=2,
+        async_transfers=False))
+    bt = eng.manager.block_tokens
+    rng = np.random.default_rng(0)
+    blocks = [[int(t) for t in rng.integers(0, 200, size=bt)]
+              for _ in range(4)]
+    tail = [int(t) for t in rng.integers(0, 200, size=5)]
+    r1 = eng.submit(sum(blocks, []) + tail,
+                    params=SamplingParams(max_new_tokens=2),
+                    session_id="seg-a", retain_blocks=True)
+    eng.run(max_steps=500)
+    assert r1.generated, "first session produced no tokens"
+    divergent = [int(t) for t in rng.integers(200, 400, size=bt)]
+    r2 = eng.submit(divergent + sum(blocks[1:], []) + tail,
+                    params=SamplingParams(max_new_tokens=2),
+                    session_id="seg-b")
+    eng.run(max_steps=500)
+    st = eng.stats()
+    eng.shutdown()
+    assert r2.generated, "divergent session produced no tokens"
+    assert r2.prefix_hit_blocks == 0           # radix sees nothing
+    assert r2.segment_hit_blocks >= 1, "no resumed-segment hits"
+    resumed = st["segment_share_hits"] + st["segment_inject_hits"]
+    assert resumed >= 1
+    print(f"segment smoke ok: {r2.segment_hit_blocks} mid-prompt blocks "
+          f"resumed past the divergence ({st['segment_share_hits']} "
+          f"CoW-shared, {st['segment_inject_hits']} injected), "
+          f"radix prefix hits {r2.prefix_hit_blocks}")
+    return resumed
 
 
 def cluster_smoke() -> None:
@@ -169,6 +210,9 @@ def main() -> None:
     t0 = time.perf_counter()
     single_engine_smoke()
     t_single = time.perf_counter() - t0
+    t_seg0 = time.perf_counter()
+    segment_resumed = segment_smoke()
+    t_segment = time.perf_counter() - t_seg0
     t1 = time.perf_counter()
     cluster_smoke()
     t_cluster = time.perf_counter() - t1
@@ -186,7 +230,10 @@ def main() -> None:
     # job log carries one consolidated timing line
     tier1_s = os.environ.get("TIER1_WALL_S", "")
     print(f"smoke summary: kernel_backend={default_backend()} "
-          f"single={t_single:.1f}s cluster={t_cluster:.1f}s "
+          f"single={t_single:.1f}s "
+          f"segment={t_segment:.1f}s "
+          f"segment_resumed_blocks={segment_resumed} "
+          f"cluster={t_cluster:.1f}s "
           f"shared={t_shared:.1f}s steploop={t_steploop:.1f}s "
           f"steploop_host_kernel_ratio={steploop_ratio:.2f} "
           f"frontend={t_frontend:.1f}s "

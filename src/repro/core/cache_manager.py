@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -29,7 +30,8 @@ from repro.config import ModelConfig
 from repro.core import sizing
 from repro.core.agentic import MarkovToolPredictor, SessionFeatures, classify_session
 from repro.core.bayesian import BayesianReusePredictor
-from repro.core.dedup import ContentStore, RadixTree, content_hash
+from repro.core.dedup import (ContentStore, RadixTree, SegmentIndex,
+                              SegmentMatch, content_hash)
 from repro.core.eviction import (BayesianPolicy, BlockMeta, EMAPolicy,
                                  EvictionPolicy, HeadImportanceTracker,
                                  LRUPolicy)
@@ -65,6 +67,9 @@ class ManagerStats:
     shared_tier_hits: int = 0    # blocks imported from the fleet-shared
     #                              tier (content another replica published)
     shared_publishes: int = 0    # blocks this replica published fleet-wide
+    segment_lookups: int = 0     # match_segments calls (one scan per admit)
+    segment_hits: int = 0        # live blocks matched past a divergence
+    segment_lookup_time: float = 0.0   # wall seconds spent in segment scans
     fetch_time: float = 0.0
     recompute_time: float = 0.0
 
@@ -112,6 +117,7 @@ class PredictiveCacheManager:
         self.placement = PlacementPolicy(self.hierarchy)
         self.store = ContentStore() if enable_dedup else None
         self.radix = RadixTree(self.block_tokens)
+        self.segments = SegmentIndex(self.block_tokens, salt=cfg.name)
         self.prefetcher = (RoPEPrefetcher(self.block_tokens, cfg.n_layers)
                            if enable_prefetch else None)
         self.agentic = MarkovToolPredictor()
@@ -294,6 +300,10 @@ class PredictiveCacheManager:
             self.metas[bid] = meta
             if payload is not None:
                 self._payloads[bid] = payload
+            if len(tokens) == self.block_tokens:
+                # position-independent content key: a later prompt can
+                # resume on this block after a divergent span
+                self.segments.insert_block(tokens, bid, digest=h)
             self._admit(meta, payload)
             return bid, False
 
@@ -337,6 +347,37 @@ class PredictiveCacheManager:
                 break
             depth += 1
         return depth
+
+    def match_segments(self, tokens: Sequence[int],
+                       start_block: int = 0) -> List[SegmentMatch]:
+        """Content-segment matches past a radix divergence: maximal runs
+        of live registered blocks among the full blocks of ``tokens``
+        from block index ``start_block``.  The scan cost is metered into
+        ``stats.segment_lookup_time`` so the benchmark can price lookup
+        overhead against the reuse it recovers."""
+        t0 = time.perf_counter()
+        raw = self.segments.match(tokens, start_block=start_block)
+        out: List[SegmentMatch] = []
+        with self._lock:
+            for seg in raw:
+                # split runs at blocks dropped from every tier since
+                # they were indexed (meta gone -> nothing to resume on)
+                s, ids = seg.start_block, []
+                for j, bid in enumerate(seg.block_ids):
+                    if bid in self.metas:
+                        if not ids:
+                            s = seg.start_block + j
+                        ids.append(bid)
+                    else:
+                        if len(ids) >= self.segments.min_blocks:
+                            out.append(SegmentMatch(s, ids))
+                        ids = []
+                if len(ids) >= self.segments.min_blocks:
+                    out.append(SegmentMatch(s, ids))
+            self.stats.segment_lookups += 1
+            self.stats.segment_hits += sum(m.n_blocks for m in out)
+            self.stats.segment_lookup_time += time.perf_counter() - t0
+        return out
 
     # ------------------------------------------------------------------
     # admission & eviction
@@ -398,6 +439,7 @@ class PredictiveCacheManager:
         for t in self.hierarchy.tiers:
             t.evict(block_id)
         self.radix.remove_block(block_id)
+        self.segments.remove_block(block_id)
         self._payloads.pop(block_id, None)
         self.metas.pop(block_id, None)
 
@@ -616,6 +658,8 @@ class PredictiveCacheManager:
             self.metas.clear()
             self._payloads.clear()
             self.radix = RadixTree(self.block_tokens)
+            self.segments = SegmentIndex(self.block_tokens,
+                                         salt=self.cfg.name)
             if self.store is not None:
                 self.store = ContentStore()
 
@@ -639,6 +683,10 @@ class PredictiveCacheManager:
             "cold_misses": self.stats.cold_misses,
             "shared_tier_hits": self.stats.shared_tier_hits,
             "shared_publishes": self.stats.shared_publishes,
+            "segment_lookups": self.stats.segment_lookups,
+            "segment_hits": self.stats.segment_hits,
+            "segment_lookup_time": self.stats.segment_lookup_time,
+            "segment_index": self.segments.stats(),
             "fleet": self._fleet.stats() if self._fleet else {},
             "dedup": self.store.stats() if self.store else {},
             "tiers": self.hierarchy.stats(),

@@ -1,13 +1,17 @@
 """Content-addressable deduplication (paper §III-F).
 
-Two cooperating indexes:
+Three cooperating indexes:
 
   * a SHA-256 **content store** with reference counting — identical KV
     blocks (system prompts, few-shot examples, tool descriptions repeated
     verbatim) are stored once;
   * a **radix tree** over token-id sequences for longest-prefix matching —
     a new request reuses every cached block along its longest matched
-    prefix (this is what converts dedup hits into skipped prefill compute).
+    prefix (this is what converts dedup hits into skipped prefill compute);
+  * a **segment index** keying every registered block by its salted
+    content digest independent of prompt position, so a prefix match
+    that diverges mid-prompt (history truncation shifting blocks left)
+    can *resume* on contiguous content past the divergent span.
 
 Checkpoint persistence to Tier 5 uses delta-encoding: a manifest
 references already-present blocks by hash and only ships new ones
@@ -15,10 +19,11 @@ references already-present blocks by hash and only ships new ones
 """
 from __future__ import annotations
 
+import bisect
 import hashlib
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -198,6 +203,142 @@ class RadixTree:
             count += len(n.children)
             stack.extend(n.children.values())
         return count
+
+
+# ---------------------------------------------------------------------------
+# Segment index: position-independent content lookup (resume past divergence)
+# ---------------------------------------------------------------------------
+@dataclass
+class SegmentMatch:
+    """One resumed run of content-matched blocks within a query prompt."""
+    start_block: int                 # block index into the query's prompt
+    block_ids: List[str]             # canonical block id per matched block
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.block_ids)
+
+    @property
+    def end_block(self) -> int:
+        return self.start_block + len(self.block_ids)
+
+
+class SegmentIndex:
+    """Content-digest index over block *segments*.
+
+    The radix tree can only reuse the longest contiguous prefix: one
+    divergent block (history truncation shifting the conversation left)
+    loses everything after it.  This index keys every registered full
+    block by its salted content digest with no positional context, so a
+    match can **resume** after a divergent span: ``match`` scans a
+    query's full blocks from a given block index and groups consecutive
+    digest hits into maximal segments — non-overlapping and in prompt
+    order by construction, one lookup per scanned block.
+
+    Index contents are a pure function of the inserted
+    (digest, block id) pairs: per digest the ids are kept sorted and
+    ``lookup`` returns the smallest, so the index is invariant to
+    session insertion order under a fixed salt.
+    """
+
+    def __init__(self, block_tokens: int, salt: str = "",
+                 min_blocks: int = 1):
+        self.block_tokens = block_tokens
+        self.salt = salt
+        self.min_blocks = max(1, min_blocks)
+        self._by_digest: Dict[str, List[str]] = {}   # digest -> sorted ids
+        self._digests_of: Dict[str, Set[str]] = {}   # block id -> digests
+        self._lock = threading.RLock()
+        self.lookups = 0
+        self.hits = 0
+
+    def block_digest(self, tokens: Sequence[int]) -> str:
+        """Digest of one full block's token ids under the index salt."""
+        assert len(tokens) == self.block_tokens, "full blocks only"
+        return content_hash(tokens, salt=self.salt)
+
+    def _blocks_of(self, tokens: Sequence[int]) -> List[Sequence[int]]:
+        bt = self.block_tokens
+        n = (len(tokens) // bt) * bt
+        return [tokens[i:i + bt] for i in range(0, n, bt)]
+
+    def insert_block(self, tokens: Sequence[int], block_id: str,
+                     digest: Optional[str] = None) -> str:
+        """Register one full block; returns its digest (computed from
+        ``tokens`` unless the caller already has it)."""
+        d = digest if digest is not None else self.block_digest(tokens)
+        with self._lock:
+            ids = self._by_digest.setdefault(d, [])
+            if block_id not in ids:
+                bisect.insort(ids, block_id)
+            self._digests_of.setdefault(block_id, set()).add(d)
+        return d
+
+    def insert_sequence(self, tokens: Sequence[int],
+                        block_ids: Sequence[str]) -> None:
+        """Register every full block of ``tokens`` mapped 1:1 onto
+        ``block_ids`` (same contract as ``RadixTree.insert``)."""
+        blocks = self._blocks_of(tokens)
+        assert len(block_ids) >= len(blocks), "one block id per full block"
+        for blk, bid in zip(blocks, block_ids):
+            self.insert_block(blk, bid)
+
+    def lookup(self, digest: str) -> Optional[str]:
+        """Canonical (smallest) block id registered for ``digest``."""
+        with self._lock:
+            ids = self._by_digest.get(digest)
+            return ids[0] if ids else None
+
+    def remove_block(self, block_id: str) -> None:
+        """Unregister an evicted block from every digest it backed."""
+        with self._lock:
+            for d in self._digests_of.pop(block_id, ()):
+                ids = self._by_digest.get(d)
+                if ids is None:
+                    continue
+                try:
+                    ids.remove(block_id)
+                except ValueError:
+                    pass
+                if not ids:
+                    del self._by_digest[d]
+
+    def match(self, tokens: Sequence[int],
+              start_block: int = 0) -> List[SegmentMatch]:
+        """Scan full blocks of ``tokens`` from block index
+        ``start_block`` and return maximal runs of content hits as
+        segments (>= ``min_blocks`` long).  Segments never overlap and
+        appear in prompt order — the scan is a single left-to-right
+        pass, one digest lookup per block."""
+        blocks = self._blocks_of(tokens)
+        out: List[SegmentMatch] = []
+        run_start, run_ids = -1, []     # current run of consecutive hits
+        with self._lock:
+            for i in range(max(0, start_block), len(blocks)):
+                self.lookups += 1
+                bid = self.lookup(self.block_digest(blocks[i]))
+                if bid is not None:
+                    self.hits += 1
+                    if run_start < 0:
+                        run_start = i
+                    run_ids.append(bid)
+                elif run_start >= 0:
+                    if len(run_ids) >= self.min_blocks:
+                        out.append(SegmentMatch(run_start, run_ids))
+                    run_start, run_ids = -1, []
+            if run_start >= 0 and len(run_ids) >= self.min_blocks:
+                out.append(SegmentMatch(run_start, run_ids))
+        return out
+
+    def size(self) -> int:
+        with self._lock:
+            return len(self._by_digest)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"digests": len(self._by_digest),
+                    "lookups": self.lookups,
+                    "hits": self.hits}
 
 
 # ---------------------------------------------------------------------------

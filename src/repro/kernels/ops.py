@@ -26,7 +26,9 @@ from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.mla_paged_decode import mla_paged_decode
 from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.paged_prefill import (mla_paged_prefill,
-                                         paged_prefill_attention)
+                                         mla_paged_prefill_segments,
+                                         paged_prefill_attention,
+                                         paged_prefill_segments)
 
 
 # -- jitted Pallas entry points (interpret resolved to a static bool) -------
@@ -70,6 +72,26 @@ def _mla_prefill_pallas(q_lat, q_rope, lat_chunk, latent_pages,
     return mla_paged_prefill(q_lat, q_rope, lat_chunk, latent_pages,
                              block_tables, offsets, d_latent=d_latent,
                              scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_prefill_seg_pallas(q, k_chunk, v_chunk, k_pages, v_pages,
+                              block_tables, chunk_positions,
+                              interpret: bool):
+    return paged_prefill_segments(q, k_chunk, v_chunk, k_pages, v_pages,
+                                  block_tables, chunk_positions,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("d_latent", "scale",
+                                             "interpret"))
+def _mla_prefill_seg_pallas(q_lat, q_rope, lat_chunk, latent_pages,
+                            block_tables, chunk_positions, d_latent: int,
+                            scale: float | None, interpret: bool):
+    return mla_paged_prefill_segments(q_lat, q_rope, lat_chunk,
+                                      latent_pages, block_tables,
+                                      chunk_positions, d_latent=d_latent,
+                                      scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -146,6 +168,43 @@ def mla_prefill(q_lat, q_rope, lat_chunk, latent_pages, block_tables,
                                scale=scale, interpret=(be == "interpret"))
 
 
+def paged_prefill_seg(q, k_chunk, v_chunk, k_pages, v_pages, block_tables,
+                      chunk_positions, backend: str | None = None,
+                      interpret: bool | None = None):
+    """Segment prefill: per-query absolute positions (``chunk_positions``
+    [B,C] int32, ascending valid entries, negative = padding) so one
+    chunk can span multiple prompt gaps with resumed pool-resident
+    segments between them.  Queries attend every resident pool token
+    below their own position — excluding the chunk's not-yet-scattered
+    positions — plus chunk tokens causally."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.paged_prefill_segments_xla(
+            q, k_chunk, v_chunk, k_pages, v_pages, block_tables,
+            chunk_positions)
+    return _paged_prefill_seg_pallas(q, k_chunk, v_chunk, k_pages, v_pages,
+                                     block_tables, chunk_positions,
+                                     interpret=(be == "interpret"))
+
+
+def mla_prefill_seg(q_lat, q_rope, lat_chunk, latent_pages, block_tables,
+                    chunk_positions, d_latent: int,
+                    scale: float | None = None,
+                    backend: str | None = None,
+                    interpret: bool | None = None):
+    """Absorbed-MLA segment prefill over latent pages (same position
+    semantics as ``paged_prefill_seg``)."""
+    be = resolve_backend(backend, interpret)
+    if be == "xla":
+        return xla_fallback.mla_paged_prefill_segments_xla(
+            q_lat, q_rope, lat_chunk, latent_pages, block_tables,
+            chunk_positions, d_latent=d_latent, scale=scale)
+    return _mla_prefill_seg_pallas(q_lat, q_rope, lat_chunk, latent_pages,
+                                   block_tables, chunk_positions,
+                                   d_latent=d_latent, scale=scale,
+                                   interpret=(be == "interpret"))
+
+
 def paged_decode_int8(q, k_pages, v_pages, k_scales, v_scales,
                       block_tables, lengths, backend: str | None = None,
                       interpret: bool | None = None):
@@ -165,3 +224,5 @@ flash_causal_ref = ref.flash_prefill_ref
 mla_decode_ref = ref.mla_paged_decode_ref
 paged_prefill_ref = ref.paged_prefill_attention_ref
 mla_prefill_ref = ref.mla_paged_prefill_ref
+paged_prefill_seg_ref = ref.paged_prefill_segments_ref
+mla_prefill_seg_ref = ref.mla_paged_prefill_segments_ref

@@ -173,6 +173,187 @@ def paged_prefill_attention(q: jax.Array, k_chunk: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Segment prefill: per-query absolute positions instead of one scalar
+# offset.  A chunk may span multiple prompt *gaps* with resumed
+# (pool-resident) content segments between them: query i at absolute
+# position cpos[i] attends every resident pool token below its position
+# — excluding the chunk's own not-yet-scattered positions — plus chunk
+# tokens j <= i.  With cpos = offset + arange(C) this reduces exactly to
+# the scalar-offset kernel above.
+# ---------------------------------------------------------------------------
+def _pool_limits(chunk_positions: jax.Array, c: int) -> jax.Array:
+    """Tokens of resident pool context any query may attend, per row:
+    the start position of the trailing contiguous run of valid chunk
+    positions (everything from there up is the chunk's own writes, never
+    read from the pool).  Drives page-iteration gating and the DMA
+    clamp, and reduces to ``offsets`` in the degenerate contiguous
+    case."""
+    cp = chunk_positions
+    valid = cp >= 0
+    idx = jnp.arange(c, dtype=cp.dtype)[None, :]
+    d = cp - idx                         # constant along a contiguous run
+    any_valid = jnp.any(valid, axis=1)
+    last = jnp.argmax(jnp.where(valid, idx, -1), axis=1)       # [B]
+    d_last = jnp.take_along_axis(d, last[:, None], axis=1)     # [B, 1]
+    in_suffix = idx <= last[:, None]
+    ok = jnp.where(in_suffix, (d == d_last) & valid, True)
+    suffix_all = jnp.flip(
+        jnp.cumprod(jnp.flip(ok.astype(jnp.int32), 1), 1), 1).astype(bool)
+    big = jnp.asarray(jnp.iinfo(jnp.int32).max, cp.dtype)
+    run_min = jnp.min(
+        jnp.where(suffix_all & in_suffix & valid, cp, big), axis=1)
+    return jnp.where(any_valid, run_min, 0).astype(jnp.int32)
+
+
+def _prefill_seg_kernel(
+    # scalar-prefetch operands
+    block_tables_ref,      # [B, P] int32
+    limits_ref,            # [B] int32  (resident pool tokens attendable)
+    # array operands (blocked)
+    cp_ref,                # [1, C, 1] int32  per-query absolute positions
+    q_ref,                 # [1, C, Hq, hd]
+    kc_ref,                # [1, C, Hkv, hd]  chunk KV (not yet in the pool)
+    vc_ref,                # [1, C, Hkv, hd]
+    kp_ref,                # [1, page, Hkv, hd]  pool page
+    vp_ref,                # [1, page, Hkv, hd]
+    # outputs
+    o_ref,                 # [1, C, Hq, hd]
+    # scratch
+    m_ref,                 # [C, Hq] f32
+    l_ref,                 # [C, Hq] f32
+    acc_ref,               # [C, Hq, hd] f32
+    *, page: int, n_prior: int, chunk: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    limit = limits_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update(s, v, hkv, g):
+        """Online-softmax update; s [C, Hq, T], v [T, Hkv, hd]."""
+        m_prev = m_ref[...]                              # [C, Hq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new[..., None])             # [C, Hq, T]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(prob, axis=-1)
+        pg = prob.reshape(chunk, hkv, g, -1)
+        pv = jnp.einsum("chgt,thd->chgd", pg, v)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            pv.reshape(chunk, -1, v.shape[-1])
+        m_ref[...] = m_new
+
+    # full attention to resident pool tokens below each query's own
+    # position; pages wholly at/past the limit hold nothing attendable
+    @pl.when((p < n_prior) & (p * page < limit))
+    def _prior():
+        q = q_ref[0].astype(jnp.float32)                 # [C, Hq, hd]
+        k = kp_ref[0].astype(jnp.float32)                # [page, Hkv, hd]
+        v = vp_ref[0].astype(jnp.float32)
+        c, hq, hd = q.shape
+        hkv = k.shape[1]
+        g = hq // hkv
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(c, hkv, g, hd)
+        s = jnp.einsum("chgd,thd->chgt", qg, k).reshape(c, hq, page) * scale
+        cpos = cp_ref[0]                                 # [C, 1]
+        keyp = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (c, page), 1)                     # rows identical
+        # pool slots this chunk itself will occupy are not yet written:
+        # row j of eq marks cpos[j]'s slot; any() folds over the chunk
+        excl = jnp.any(keyp == cpos, axis=0, keepdims=True)   # [1, page]
+        mask = (keyp < cpos) & jnp.logical_not(excl)          # [C, page]
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        _update(s, v, hkv, g)
+
+    # causal attention within the chunk itself (positions are strictly
+    # ascending, so index order == position order), then finalize
+    @pl.when(p == n_prior)
+    def _chunk():
+        q = q_ref[0].astype(jnp.float32)
+        k = kc_ref[0].astype(jnp.float32)                # [C, Hkv, hd]
+        v = vc_ref[0].astype(jnp.float32)
+        c, hq, hd = q.shape
+        hkv = k.shape[1]
+        g = hq // hkv
+        scale = 1.0 / math.sqrt(hd)
+        qg = q.reshape(c, hkv, g, hd)
+        s = jnp.einsum("chgd,thd->chgt", qg, k).reshape(c, hq, c) * scale
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (c, 1, c), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (c, 1, c), 2)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        _update(s, v, hkv, g)
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_prefill_segments(q: jax.Array, k_chunk: jax.Array,
+                           v_chunk: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           chunk_positions: jax.Array, *,
+                           interpret: bool | None = None) -> jax.Array:
+    """q [B,C,Hq,hd]; k/v_chunk [B,C,Hkv,hd]; k/v_pages [N,page,Hkv,hd];
+    block_tables [B,P] int32; chunk_positions [B,C] int32 -> [B,C,Hq,hd].
+
+    Query i of request b sits at absolute position chunk_positions[b, i]
+    (strictly ascending among valid entries; negative = padding): it
+    attends every resident pool token below its position through the
+    block table — the chunk's own not-yet-scattered positions excluded —
+    plus chunk tokens j <= i.  Every position below a query's that is
+    not in the chunk must already be resident (earlier gaps filled,
+    resumed segments shared or injected).  The chunk's KV must NOT yet
+    be written to the pool; the caller scatters it afterwards.
+    """
+    interpret = resolve_interpret(interpret)
+    b, c, hq, hd = q.shape
+    n, page, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    limits = _pool_limits(chunk_positions, c)
+    cp3 = chunk_positions.astype(jnp.int32)[:, :, None]   # [B, C, 1]
+
+    def _page_idx(bi, pi, bt, lim):
+        # clamp to the last page holding attendable resident tokens so
+        # consecutive identical indices elide the DMA entirely
+        last_useful = jnp.maximum((lim[bi] + page - 1) // page - 1, 0)
+        return (bt[bi, jnp.minimum(pi, jnp.minimum(last_useful,
+                                                   p_max - 1))], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, p_max + 1),
+        in_specs=[
+            pl.BlockSpec((1, c, 1), lambda bi, pi, bt, lim: (bi, 0, 0)),
+            pl.BlockSpec((1, c, hq, hd), lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hkv, hd), lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hkv, hd), lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, page, hkv, hd), _page_idx),
+            pl.BlockSpec((1, page, hkv, hd), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, c, hq, hd),
+                               lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq, hd), jnp.float32),
+        ],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_prefill_seg_kernel, page=page, n_prior=p_max,
+                          chunk=c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hq, hd), q.dtype),
+        interpret=interpret,
+    )
+    return kernel(block_tables, limits, cp3, q, k_chunk, v_chunk,
+                  k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
 # Absorbed-MLA chunked prefill: queries move into latent space, pages are
 # dense [page, dl+dr] strips shared by all heads (same layout as
 # kernels/mla_paged_decode.py), so one matmul per page serves every head.
@@ -278,4 +459,118 @@ def mla_paged_prefill(q_lat: jax.Array, q_rope: jax.Array,
         interpret=interpret,
     )
     return kernel(block_tables, offsets, q_lat, q_rope, lat_chunk,
+                  latent_pages)
+
+
+def _mla_prefill_seg_kernel(block_tables_ref, limits_ref, cp_ref,
+                            q_lat_ref, q_rope_ref, lat_chunk_ref,
+                            lat_page_ref, o_ref, m_ref, l_ref, acc_ref,
+                            *, page: int, n_prior: int, chunk: int,
+                            d_latent: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    limit = limits_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _update(s, c_kv):
+        m_prev = m_ref[...]                              # [C, Hq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new[..., None])             # [C, Hq, T]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(prob, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + \
+            jnp.einsum("cht,tl->chl", prob, c_kv)
+        m_ref[...] = m_new
+
+    @pl.when((p < n_prior) & (p * page < limit))
+    def _prior():
+        ql = q_lat_ref[0].astype(jnp.float32)            # [C, Hq, dl]
+        qr = q_rope_ref[0].astype(jnp.float32)           # [C, Hq, dr]
+        lat = lat_page_ref[0].astype(jnp.float32)        # [page, dl+dr]
+        c_kv, kr = lat[:, :d_latent], lat[:, d_latent:]
+        s = (jnp.einsum("chl,tl->cht", ql, c_kv)
+             + jnp.einsum("chr,tr->cht", qr, kr)) * scale
+        cpos = cp_ref[0]                                 # [C, 1]
+        keyp = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, (chunk, page), 1)
+        excl = jnp.any(keyp == cpos, axis=0, keepdims=True)   # [1, page]
+        mask = (keyp < cpos) & jnp.logical_not(excl)          # [C, page]
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        _update(s, c_kv)
+
+    @pl.when(p == n_prior)
+    def _chunk():
+        ql = q_lat_ref[0].astype(jnp.float32)
+        qr = q_rope_ref[0].astype(jnp.float32)
+        lat = lat_chunk_ref[0].astype(jnp.float32)       # [C, dl+dr]
+        c_kv, kr = lat[:, :d_latent], lat[:, d_latent:]
+        s = (jnp.einsum("chl,tl->cht", ql, c_kv)
+             + jnp.einsum("chr,tr->cht", qr, kr)) * scale
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, chunk), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, 1, chunk), 2)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        _update(s, c_kv)
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def mla_paged_prefill_segments(q_lat: jax.Array, q_rope: jax.Array,
+                               lat_chunk: jax.Array,
+                               latent_pages: jax.Array,
+                               block_tables: jax.Array,
+                               chunk_positions: jax.Array, *,
+                               d_latent: int, scale: float = None,
+                               interpret: bool | None = None) -> jax.Array:
+    """Absorbed-MLA segment prefill (same position semantics as
+    ``paged_prefill_segments``): q_lat [B,C,Hq,dl]; q_rope [B,C,Hq,dr];
+    lat_chunk [B,C,dl+dr]; latent_pages [N,page,dl+dr];
+    chunk_positions [B,C] int32 -> ctx [B,C,Hq,dl]."""
+    interpret = resolve_interpret(interpret)
+    b, c, hq, dl = q_lat.shape
+    dr = q_rope.shape[-1]
+    n, page, dtot = latent_pages.shape
+    p_max = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dl // 4 + dr)  # ref-oracle convention
+    limits = _pool_limits(chunk_positions, c)
+    cp3 = chunk_positions.astype(jnp.int32)[:, :, None]   # [B, C, 1]
+
+    def _page_idx(bi, pi, bt, lim):
+        last_useful = jnp.maximum((lim[bi] + page - 1) // page - 1, 0)
+        return (bt[bi, jnp.minimum(pi, jnp.minimum(last_useful,
+                                                   p_max - 1))], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, p_max + 1),
+        in_specs=[
+            pl.BlockSpec((1, c, 1), lambda bi, pi, bt, lim: (bi, 0, 0)),
+            pl.BlockSpec((1, c, hq, dl), lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, hq, dr), lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, c, dtot), lambda bi, pi, bt, lim: (bi, 0, 0)),
+            pl.BlockSpec((1, page, dtot), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, c, hq, dl),
+                               lambda bi, pi, bt, lim: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq), jnp.float32),
+            pltpu.VMEM((c, hq, dl), jnp.float32),
+        ],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_mla_prefill_seg_kernel, page=page,
+                          n_prior=p_max, chunk=c, d_latent=dl,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, hq, dl), q_lat.dtype),
+        interpret=interpret,
+    )
+    return kernel(block_tables, limits, cp3, q_lat, q_rope, lat_chunk,
                   latent_pages)

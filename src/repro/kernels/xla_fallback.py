@@ -143,6 +143,80 @@ def paged_prefill_attention_xla(q: jax.Array, k_chunk: jax.Array,
     return o.reshape(b, c, hq, hd).astype(q.dtype)
 
 
+@jax.jit
+def paged_prefill_segments_xla(q: jax.Array, k_chunk: jax.Array,
+                               v_chunk: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               chunk_positions: jax.Array) -> jax.Array:
+    """Segment prefill: query i of row b sits at absolute position
+    ``chunk_positions[b, i]`` (ascending valid entries; negative =
+    padding) and attends every resident pool token below its position —
+    excluding the chunk's own not-yet-scattered positions — plus chunk
+    tokens j <= i.  Generalizes ``paged_prefill_attention_xla`` to a
+    chunk spanning multiple prompt gaps with resumed (pool-resident)
+    segments between them."""
+    b, c, hq, hd = q.shape
+    _, page, hkv, _ = k_pages.shape
+    p_max = block_tables.shape[1]
+    g = hq // hkv
+    t_prior = p_max * page
+
+    kp = jnp.take(k_pages, block_tables, axis=0, mode="clip").reshape(b, t_prior, hkv, hd)
+    vp = jnp.take(v_pages, block_tables, axis=0, mode="clip").reshape(b, t_prior, hkv, hd)
+    k = jnp.concatenate([kp, k_chunk], axis=1)       # [B, T, Hkv, hd]
+    v = jnp.concatenate([vp, v_chunk], axis=1)
+    qg = q.reshape(b, c, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bchgd,bthd->bchgt", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    pos = jnp.arange(t_prior + c)
+    own = jnp.any(pos[None, None, :] == chunk_positions[:, :, None],
+                  axis=1)                                      # [B, T]
+    prior = (pos[None, None, :] < chunk_positions[:, :, None]) \
+        & ~own[:, None, :]                                     # [B, C, T]
+    causal = (pos[None, None, :] >= t_prior) & \
+        (pos[None, None, :] - t_prior <= jnp.arange(c)[None, :, None])
+    mask = prior | causal
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bchgt,bthd->bchgd", p, v.astype(jnp.float32))
+    return o.reshape(b, c, hq, hd).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_latent", "scale"))
+def mla_paged_prefill_segments_xla(q_lat: jax.Array, q_rope: jax.Array,
+                                   lat_chunk: jax.Array,
+                                   latent_pages: jax.Array,
+                                   block_tables: jax.Array,
+                                   chunk_positions: jax.Array, *,
+                                   d_latent: int,
+                                   scale: float | None = None) -> jax.Array:
+    """Absorbed-MLA segment prefill (same position semantics as
+    ``paged_prefill_segments_xla``) -> ctx [B,C,Hq,dl]."""
+    b, c, hq, dl = q_lat.shape
+    dr = q_rope.shape[-1]
+    _, page, dtot = latent_pages.shape
+    t_prior = block_tables.shape[1] * page
+    if scale is None:
+        scale = 1.0 / math.sqrt(dl // 4 + dr)  # ref-oracle convention
+
+    lat_p = jnp.take(latent_pages, block_tables,
+                     axis=0, mode="clip").reshape(b, t_prior, dtot)
+    lat = jnp.concatenate([lat_p, lat_chunk], axis=1).astype(jnp.float32)
+    c_kv, kr = lat[..., :d_latent], lat[..., d_latent:]
+    s = (jnp.einsum("bchl,btl->bcht", q_lat.astype(jnp.float32), c_kv)
+         + jnp.einsum("bchr,btr->bcht", q_rope.astype(jnp.float32),
+                      kr)) * scale
+    pos = jnp.arange(t_prior + c)
+    own = jnp.any(pos[None, None, :] == chunk_positions[:, :, None], axis=1)
+    prior = (pos[None, None, :] < chunk_positions[:, :, None]) \
+        & ~own[:, None, :]
+    causal = (pos[None, None, :] >= t_prior) & \
+        (pos[None, None, :] - t_prior <= jnp.arange(c)[None, :, None])
+    s = jnp.where((prior | causal)[:, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bcht,btl->bchl", p, c_kv).astype(q_lat.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("d_latent", "scale"))
 def mla_paged_prefill_xla(q_lat: jax.Array, q_rope: jax.Array,
                           lat_chunk: jax.Array, latent_pages: jax.Array,

@@ -143,6 +143,12 @@ class Model:
         raise NotImplementedError(
             f"{type(self).__name__} has no chunked prefill path")
 
+    def prefill_chunk_seg(self, params: Params, state: DecodeState,
+                          tokens: jax.Array, chunk_positions: jax.Array,
+                          backend: str = None) -> Dict:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no segment prefill path")
+
     # -- dry-run inputs -------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every input of the entry point."""
@@ -683,6 +689,71 @@ class DecoderModel(Model):
                                        shd=NOSHARD)
             o = ops.paged_prefill(q, k, v, kp, vp, bt, offset,
                                   backend=backend)
+            mask = attn.head_mask(cfg, o.dtype)
+            if mask is not None:
+                o = o * mask              # zero padded layout heads
+            o = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            x = x + o
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            f, _ = self._ffn(lp, h)
+            return x + f, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(
+            layer_fn, x,
+            (params["layers"], state["k_pages"], state["v_pages"]))
+        return {"k": ks, "v": vs}
+
+    def prefill_chunk_seg(self, params, state, tokens, chunk_positions,
+                          backend=None):
+        """Segment-prefill a chunk of prompt *gap* tokens at arbitrary
+        ascending absolute positions (``chunk_positions`` [1, C] int32;
+        negative = padding).  Same contract as ``prefill_chunk`` except
+        the chunk may span multiple gaps with resumed pool-resident
+        segments between them: RoPE is applied at each token's true
+        position and attention runs through the segment kernels
+        (kernels/ops.py ``paged_prefill_seg``/``mla_prefill_seg``).
+        Every position below a chunk token's that is not in the chunk
+        must already be resident in the slot's pages."""
+        from repro.kernels import ops
+
+        cfg = self.cfg
+        positions = jnp.maximum(chunk_positions, 0)   # RoPE-safe padding
+        bt = state["block_table"]
+
+        x = self._embed(params, tokens)
+        if cfg.attention_variant == MLA:
+            dl, dr = cfg.d_latent, cfg.d_rope
+            scale = 1.0 / math.sqrt(cfg.hd + dr)
+
+            def layer_fn(x, inp):
+                lp, latp = inp
+                h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                q_nope, q_rope, latent = attn.mla_project(
+                    lp["attn"], h, positions, cfg)
+                q_lat = jnp.einsum("bshk,lhk->bshl", q_nope,
+                                   lp["attn"]["w_uk"])
+                ctx = ops.mla_prefill_seg(q_lat, q_rope, latent, latp, bt,
+                                          chunk_positions, d_latent=dl,
+                                          scale=scale, backend=backend)
+                out = jnp.einsum("bshl,lhk->bshk", ctx, lp["attn"]["w_uv"])
+                o = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+                x = x + o
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                f, _ = self._ffn(lp, h)
+                return x + f, latent
+
+            _, lats = jax.lax.scan(layer_fn, x,
+                                   (params["layers"],
+                                    state["latent_pages"]))
+            return {"latent": lats}
+
+        def layer_fn(x, inp):
+            lp, kp, vp = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn.project_qkv(lp["attn"], h, positions, cfg,
+                                       shd=NOSHARD)
+            o = ops.paged_prefill_seg(q, k, v, kp, vp, bt,
+                                      chunk_positions, backend=backend)
             mask = attn.head_mask(cfg, o.dtype)
             if mask is not None:
                 o = o * mask              # zero padded layout heads

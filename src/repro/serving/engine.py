@@ -91,6 +91,10 @@ class EngineConfig:
     #                                   via kernels/backend.py (the
     #                                   REPRO_KERNEL_BACKEND env var, else
     #                                   pallas on TPU / xla elsewhere)
+    segment_reuse: bool = True        # content-segment index: resume
+    #                                   pool-resident blocks mid-prompt
+    #                                   beyond the contiguous radix prefix
+    #                                   (False: monolithic-radix A/B)
     fused_step: bool = True           # decode attention + logits + sampling
     #                                   in ONE jitted closure with the KV
     #                                   state donated through it and the
@@ -203,6 +207,14 @@ class ServingEngine:
         self._prefill_chunk = jax.jit(
             functools.partial(self.model.prefill_chunk,
                               backend=self.kernel_backend))
+        # segment reuse needs the chunked paged path: resumed mid-prompt
+        # islands are CoW-mapped / injected into the block table and the
+        # gaps between them prefill through the position-explicit kernel
+        self.seg_enabled = engine_cfg.segment_reuse and self.chunked
+        self._prefill_chunk_seg = (jax.jit(
+            functools.partial(self.model.prefill_chunk_seg,
+                              backend=self.kernel_backend))
+            if self.chunked else None)
         # request_id -> [payload | None, length]; payload is the staging
         # buffer — dropped once the async demotion write lands
         self._preempted_payloads: Dict[int, list] = {}
@@ -229,6 +241,10 @@ class ServingEngine:
         self.shared_fetch_hits = 0     # ... imported from the fleet-shared
         #                                tier (content another replica
         #                                published; charged as tier-4 fetch)
+        self.segment_share_hits = 0    # mid-prompt blocks resumed via the
+        #                                segment index by CoW page map
+        self.segment_inject_hits = 0   # ... by tier payload injection
+        self.segment_chunks = 0        # position-explicit kernel chunks
         self.last_step_prefill_tokens = 0
         self.max_step_prefill_tokens = 0   # budget-compliance witness
 
@@ -346,6 +362,50 @@ class ServingEngine:
                 n_hit += 1
         req.prefix_hit_blocks = n_hit
 
+        # segment reuse: beyond the contiguous prefix, the content-
+        # segment index finds pool/tier-resident runs of full blocks at
+        # matching positions mid-prompt (e.g. a ShareGPT history whose
+        # head was truncated away, shifting the surviving turns left by
+        # whole blocks).  Each resumed block is a priced ``mgr.access``
+        # (tier fetch / posterior update, hot hits counted exactly like
+        # prefix hits) and is materialized as a CoW page map or a
+        # payload injection; the gaps between resumed spans prefill
+        # through the position-explicit segment kernel.
+        if self.seg_enabled:
+            seg_spans = []
+            req.segment_hit_blocks = 0     # lost-payload re-admission
+            for seg in mgr.match_segments(effective, start_block=n_hit):
+                run_start, run_len = seg.start_block, 0
+                for j, bid in enumerate(seg.block_ids):
+                    res = mgr.access(bid, transition=transition)
+                    ok = not res.recomputed
+                    if ok:
+                        start = (seg.start_block + j) * bt
+                        if self.paged and self.kv.can_share(bid):
+                            self.kv.share_block(slot, bid, start)
+                            self.segment_share_hits += 1
+                        else:
+                            pl = mgr._payloads.get(bid)
+                            if pl is None:
+                                ok = False
+                            else:
+                                self.kv.inject_block(slot, pl, start)
+                                self.segment_inject_hits += 1
+                    if ok:
+                        if res.hit:
+                            req.hot_hit_blocks += 1
+                        if run_len == 0:
+                            run_start = seg.start_block + j
+                        run_len += 1
+                        req.segment_hit_blocks += 1
+                    else:
+                        if run_len:
+                            seg_spans.append((run_start, run_len))
+                        run_len = 0
+                if run_len:
+                    seg_spans.append((run_start, run_len))
+            req.seg_spans = seg_spans
+
         if self.chunked:
             # token-budget path: prefix-hit blocks advance the chunk
             # cursor for free; the suffix streams through plan_step()
@@ -354,11 +414,13 @@ class ServingEngine:
             self._prefix_checked[req.request_id] = self._block_epoch
             self._admit_transition[req.request_id] = transition
             self.kv.set_length(slot, prefix_len)
+            self.scheduler.start_prefill(req, slot)
+            if req.seg_spans:
+                # a resumed span adjacent to the prefix frontier moves
+                # the chunk cursor past it immediately
+                self._skip_resumed(req)
             if req.prefill_left == 0:
-                self.scheduler.start_prefill(req, slot)
                 self._finish_prefill(req)
-            else:
-                self.scheduler.start_prefill(req, slot)
             return
 
         # monolithic fallback (dense layout / --no-chunked A/B): prefill
@@ -433,8 +495,17 @@ class ServingEngine:
         transition = self._admit_transition.get(req.request_id,
                                                 "reasoning_step")
         matched = mgr.match_prefix(req.prefill_tokens)
+        covered = set()
+        for (s, n) in req.seg_spans:
+            covered.update(range(s, s + n))
         advanced = 0
         for i in range(req.prefill_pos // bt, len(matched)):
+            if i in covered:
+                # block already resident via a resumed segment (counted
+                # at admission) — the prefix walk just steps over it
+                req.prefill_pos += bt
+                self.kv.set_length(req.slot, req.prefill_pos)
+                continue
             bid = matched[i]
             res = mgr.access(bid, transition=transition)
             if res.recomputed:
@@ -448,6 +519,14 @@ class ServingEngine:
                 pl = mgr._payloads.get(bid)
                 if pl is None:
                     break
+                if req.seg_spans:
+                    # a resumed span above may have advanced the mapped
+                    # frontier past this block's pages, leaving them
+                    # table holes the contiguous allocator would skip
+                    pg = self.kv.page
+                    self.kv.ensure_pages_at(
+                        req.slot,
+                        list(range(i * bt // pg, (i * bt + bt) // pg)))
                 self.kv.inject_block(req.slot, pl, i * bt)
                 self.inject_hits += 1
             req.prefill_pos += bt
@@ -455,6 +534,60 @@ class ServingEngine:
             advanced += bt
             self.kv.set_length(req.slot, req.prefill_pos)
         return advanced
+
+    def _skip_resumed(self, req: Request) -> None:
+        """Jump the chunk cursor over resumed segments that touch it.
+        Spans are ascending and never adjacent (a failed or unmatched
+        block always separates them), so one pass suffices."""
+        bt = self.manager.block_tokens
+        for (s, n) in req.seg_spans:
+            if s * bt == req.prefill_pos:
+                req.prefill_pos = (s + n) * bt
+                self.kv.set_length(req.slot, req.prefill_pos)
+
+    def _gap_positions(self, req: Request, n: int) -> list:
+        """The next <= ``n`` unfilled prompt positions at/after the
+        chunk cursor, skipping resumed spans — ascending, so every
+        position below the last one is either already resident or in
+        the returned list (the segment kernel's contract)."""
+        bt = self.manager.block_tokens
+        spans = [(s * bt, (s + k) * bt) for (s, k) in req.seg_spans]
+        out = []
+        p = req.prefill_pos
+        L = len(req.prefill_tokens)
+        while len(out) < n and p < L:
+            inside = next((e for (s, e) in spans if s <= p < e), None)
+            if inside is not None:
+                p = inside
+                continue
+            out.append(p)
+            p += 1
+        return out
+
+    def _run_seg_chunk(self, req: Request, n_tokens: int) -> int:
+        """One position-explicit prefill chunk over the next gap tokens
+        (may span several gaps around resumed islands).  Pad positions
+        are -1: the kernel masks them out and RoPE sees position 0."""
+        C = self.ecfg.prefill_chunk_tokens
+        positions = self._gap_positions(req, min(C, n_tokens))
+        n = len(positions)
+        if n == 0:
+            return 0
+        toks = req.prefill_tokens
+        chunk = [toks[p] for p in positions]
+        arr = jnp.asarray([chunk + [0] * (C - n)], jnp.int32)
+        cpos = jnp.asarray([positions + [-1] * (C - n)], jnp.int32)
+        state1 = self._prefill_chunk_seg(
+            self.params, self.kv.chunk_state(req.slot), arr, cpos)
+        self.kv.write_chunk_positions(req.slot, state1, positions)
+        # every gap below positions[-1] is now filled, so the contiguous
+        # frontier advances to just past it (then over any island there)
+        req.prefill_pos = positions[-1] + 1
+        self.kv.set_length(req.slot, req.prefill_pos)
+        self._skip_resumed(req)
+        self.prefill_chunks += 1
+        self.segment_chunks += 1
+        return n
 
     def _run_prefill_chunks(self, req: Request, n_tokens: int) -> int:
         """Advance ``req``'s chunk cursor by up to ``n_tokens`` prompt
@@ -464,18 +597,29 @@ class ServingEngine:
         toks = req.prefill_tokens
         done = 0
         self._extend_prefix(req)
+        self._skip_resumed(req)
         while done < n_tokens and req.prefill_pos < len(toks):
-            n = min(C, n_tokens - done, len(toks) - req.prefill_pos)
-            chunk = list(toks[req.prefill_pos:req.prefill_pos + n])
-            arr = jnp.asarray([chunk + [0] * (C - n)], jnp.int32)
-            off = jnp.asarray([req.prefill_pos], jnp.int32)
-            state1 = self._prefill_chunk(
-                self.params, self.kv.chunk_state(req.slot), arr, off)
-            self.kv.write_chunk(req.slot, state1, req.prefill_pos, n)
-            req.prefill_pos += n
-            done += n
-            self.prefill_chunks += 1
+            if req.seg_spans:
+                # resumed islands ahead (or table holes below them):
+                # position-explicit chunks over the gap tokens, written
+                # through the hole-aware scatter
+                n = self._run_seg_chunk(req, n_tokens - done)
+                if n == 0:
+                    break
+                done += n
+            else:
+                n = min(C, n_tokens - done, len(toks) - req.prefill_pos)
+                chunk = list(toks[req.prefill_pos:req.prefill_pos + n])
+                arr = jnp.asarray([chunk + [0] * (C - n)], jnp.int32)
+                off = jnp.asarray([req.prefill_pos], jnp.int32)
+                state1 = self._prefill_chunk(
+                    self.params, self.kv.chunk_state(req.slot), arr, off)
+                self.kv.write_chunk(req.slot, state1, req.prefill_pos, n)
+                req.prefill_pos += n
+                done += n
+                self.prefill_chunks += 1
             self._extend_prefix(req)
+            self._skip_resumed(req)
         if req.prefill_left == 0:
             self._finish_prefill(req)
         return done
@@ -718,9 +862,17 @@ class ServingEngine:
             # nothing prefilled yet: no KV worth demoting — release the
             # slot and requeue for a fresh prefill
             req.prefill_tokens, req.prefill_pos = None, 0
+            req.seg_spans = []
             self.kv.release(req.slot)
             self.scheduler.preempt(req)
             return
+        if req.seg_spans and req.prefill_left > 0:
+            # the demoted payload covers [0, frontier) only — resumed
+            # islands beyond it die with the slot; the restore re-enters
+            # chunked prefill without them
+            bt = self.manager.block_tokens
+            req.seg_spans = [sp for sp in req.seg_spans
+                             if (sp[0] + sp[1]) * bt <= req.prefill_pos]
         payload, length = self.kv.evict_slot_to_payload(req.slot)
         self._preempted_payloads[req.request_id] = [payload, length]
         bid = f"preempt-{req.request_id}"
@@ -756,10 +908,13 @@ class ServingEngine:
         trace (the exact compile storm the fixed-width scatter and the
         reused step buffers exist to prevent); a test gates on this."""
         out = {}
-        for name, fn in (("decode", self._decode),
-                         ("fused_decode", self._fused_decode),
-                         ("prefill", self._prefill),
-                         ("prefill_chunk", self._prefill_chunk)):
+        closures = [("decode", self._decode),
+                    ("fused_decode", self._fused_decode),
+                    ("prefill", self._prefill),
+                    ("prefill_chunk", self._prefill_chunk)]
+        if self._prefill_chunk_seg is not None:
+            closures.append(("prefill_chunk_seg", self._prefill_chunk_seg))
+        for name, fn in closures:
             try:
                 out[name] = int(fn._cache_size())
             except Exception:          # jax-version-dependent private API
@@ -781,7 +936,11 @@ class ServingEngine:
                "max_step_prefill_tokens": self.max_step_prefill_tokens,
                "cow_share_hits": self.cow_share_hits,
                "inject_hits": self.inject_hits,
-               "shared_fetch_hits": self.shared_fetch_hits}
+               "shared_fetch_hits": self.shared_fetch_hits,
+               "segment_reuse": self.seg_enabled,
+               "segment_share_hits": self.segment_share_hits,
+               "segment_inject_hits": self.segment_inject_hits,
+               "segment_chunks": self.segment_chunks}
         if self.paged:
             out["allocator"] = self.kv.allocator.stats_dict()
             out["decode_state_reuses"] = self.kv.state_reuses

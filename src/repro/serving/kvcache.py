@@ -387,6 +387,57 @@ class PagedKVCache(_KVCacheBase):
                                             off_arr, data)
         self.state_version += 1    # pool arrays replaced
 
+    def ensure_pages_at(self, slot: int, page_indices: Sequence[int]) -> None:
+        """Allocate pages for unmapped (hole) table entries among
+        ``page_indices``.  Segment assembly maps resumed segments beyond
+        the contiguous frontier (``share_block``), which advances
+        ``_mapped`` past gap pages that are still table-entry 0 — the
+        contiguous ``_ensure_pages`` sweep would skip those holes and
+        gap writes would land on the scratch page."""
+        missing = [pi for pi in page_indices
+                   if int(self.tables[slot, pi]) == 0]
+        if not missing:
+            return
+        for pi, pid in zip(missing, self._alloc(len(missing))):
+            self.tables[slot, pi] = pid
+        self._mapped[slot] = max(self._mapped[slot],
+                                 max(page_indices) + 1)
+        self.state_version += 1
+
+    def write_chunk_positions(self, slot: int, state1: Dict,
+                              positions: Sequence[int]) -> None:
+        """Scatter the first ``len(positions)`` tokens of a segment-
+        prefill chunk at the given absolute token positions (ascending,
+        possibly non-contiguous: a chunk may span several prompt gaps
+        around resumed segments).  Buffer entries past the valid count
+        are directed at the reserved scratch page, same as
+        ``write_range``.  Does NOT advance the slot length — the caller
+        moves the contiguous frontier (``set_length``) once adjoining
+        resumed segments merge with it."""
+        n = len(positions)
+        if n == 0:
+            return
+        pos = np.asarray(positions, np.int64)
+        touched = sorted({int(p) for p in pos // self.page})
+        self.ensure_pages_at(slot, touched)
+        for pi in touched:
+            self.ensure_private(slot, pi)
+        if self.mla:
+            items = [("latent_pages", state1["latent"][:, 0])]
+        else:
+            items = [("k_pages", state1["k"][:, 0]),
+                     ("v_pages", state1["v"][:, 0])]
+        width = items[0][1].shape[1]
+        pids = np.zeros(width, np.int32)
+        offs = np.zeros(width, np.int32)
+        pids[:n] = self.tables[slot, pos // self.page]
+        offs[:n] = pos % self.page
+        pid_arr, off_arr = jnp.asarray(pids), jnp.asarray(offs)
+        for key, data in items:
+            self.pools[key] = _scatter_pool(self.pools[key], pid_arr,
+                                            off_arr, data)
+        self.state_version += 1    # pool arrays replaced
+
     # ------------------------------------------------------------------
     # reads
     # ------------------------------------------------------------------

@@ -56,6 +56,13 @@ class Request:
     shared_hit_blocks: int = 0         # blocks imported from the fleet-shared
     #                                    tier (another replica's content; a
     #                                    tier-4 fetch, NOT a hot hit)
+    segment_hit_blocks: int = 0        # blocks resumed mid-prompt via the
+    #                                    content-segment index (beyond the
+    #                                    contiguous radix prefix)
+    seg_spans: List[tuple] = field(default_factory=list)
+    #                                  # resumed (start_block, n_blocks)
+    #                                    spans, ascending, for the gap-wise
+    #                                    segment prefill path
     # chunked prefill: tokens to prefill (prompt [+ generated] minus the
     # final token) and the per-request chunk cursor into them
     prefill_tokens: Optional[List[int]] = None
@@ -98,6 +105,8 @@ class Request:
         self.prefix_hit_blocks = 0
         self.hot_hit_blocks = 0
         self.shared_hit_blocks = 0
+        self.segment_hit_blocks = 0
+        self.seg_spans = []
         self.prefill_tokens = None
         self.prefill_pos = 0
         self.t_first_token = None

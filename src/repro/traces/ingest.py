@@ -50,15 +50,30 @@ def _estimate_tokens(text: str) -> int:
 def text_blocks(text: str, block_tokens: int = BLOCK) -> List[Tuple[int, ...]]:
     """Block-align ``text``: split into ``block_tokens``-sized chunks on
     word boundaries; each chunk's content id is a stable digest of the
-    chunk text (identical text -> identical ids, across processes)."""
+    chunk text (identical text -> identical ids, across processes).
+
+    Sizing is pure integer arithmetic (``block_tokens * 3 // 4`` words
+    per block — the inverse of the 4/3 tokens-per-word estimate), so
+    chunk boundaries can never drift with float rounding.  Explicit
+    tail rule: a trailing fragment estimated under half a block merges
+    into the previous chunk instead of minting its own content id —
+    the replay materializes every id at full block size, so a
+    nearly-empty tail block both inflated reuse accounting and gave
+    re-ingested text a digest that depended on where the mis-sized
+    tail happened to fall."""
     words = text.split()
     if not words:
         return []
-    words_per_block = max(1, int(round(block_tokens / _TOKENS_PER_WORD)))
+    words_per_block = max(1, (block_tokens * 3) // 4)
+    chunks = [words[i:i + words_per_block]
+              for i in range(0, len(words), words_per_block)]
+    if len(chunks) > 1 and _estimate_tokens(
+            " ".join(chunks[-1])) < block_tokens // 2:
+        chunks[-2].extend(chunks.pop())
     out: List[Tuple[int, ...]] = []
-    for i in range(0, len(words), words_per_block):
-        chunk = " ".join(words[i:i + words_per_block])
-        out.append((zlib.crc32(chunk.encode("utf-8")) & 0x7FFFFFFF,))
+    for chunk in chunks:
+        s = " ".join(chunk)
+        out.append((zlib.crc32(s.encode("utf-8")) & 0x7FFFFFFF,))
     return out
 
 

@@ -164,6 +164,10 @@ class ServingReplayConfig:
     #                                     sampling A/B — greedy replay is
     #                                     token-identical, so hit rates
     #                                     must match either way)
+    segment_reuse: bool = True          # content-segment index: resume
+    #                                     matching blocks mid-prompt beyond
+    #                                     the contiguous radix prefix
+    #                                     (False: monolithic-radix A/B)
     max_steps: int = 50_000
 
 
@@ -215,6 +219,14 @@ class ServingReplayResult:
     virtual_time_s: float
     steps: int
     wall_s: float
+    # segment reuse (zeros when segment_reuse=False)
+    segment_hit_blocks: int = 0    # mid-prompt blocks resumed via the
+    #                                content-segment index (capped per
+    #                                request at the seen ground truth)
+    segment_share_hits: int = 0    # engine: resumed by CoW page map
+    segment_inject_hits: int = 0   # engine: resumed by payload inject
+    segment_lookups: int = 0       # manager: match_segments calls
+    segment_lookup_s: float = 0.0  # manager: wall time in those lookups
 
 
 @dataclass
@@ -367,7 +379,8 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
         prefill_chunk_tokens=rcfg.prefill_chunk_tokens,
         max_step_tokens=rcfg.max_step_tokens,
         kernel_backend=rcfg.kernel_backend,
-        fused_step=rcfg.fused_step)
+        fused_step=rcfg.fused_step,
+        segment_reuse=rcfg.segment_reuse)
     return ServingEngine(cfg, ecfg)
 
 
@@ -628,7 +641,12 @@ def run_serving_replay(rcfg: ServingReplayConfig,
     done = [t for t in core.tracked.values() if t.done_v is not None]
     seen_total = core.seen_total
     hot = sum(min(t.req.hot_hit_blocks, t.seen_blocks) for t in done)
-    served = sum(min(t.req.prefix_hit_blocks, t.seen_blocks) for t in done)
+    # any-tier cache-served: contiguous prefix blocks plus mid-prompt
+    # segment-resumed blocks (disjoint by construction — segments start
+    # past the materialized prefix)
+    served = sum(min(t.req.prefix_hit_blocks + t.req.segment_hit_blocks,
+                     t.seen_blocks) for t in done)
+    seg = sum(min(t.req.segment_hit_blocks, t.seen_blocks) for t in done)
     mst = eng.manager.stats
     lat = _latency_rollup(core)
     return ServingReplayResult(
@@ -641,7 +659,12 @@ def run_serving_replay(rcfg: ServingReplayConfig,
         hot_hits_t0=mst.hot_hits_t0, hot_hits_t1=mst.hot_hits_t1,
         cow_share_hits=eng.cow_share_hits, inject_hits=eng.inject_hits,
         promotions=mst.promotions, demotions=mst.demotions,
-        sessions=core.sessions, **lat)
+        sessions=core.sessions,
+        segment_hit_blocks=seg,
+        segment_share_hits=eng.segment_share_hits,
+        segment_inject_hits=eng.segment_inject_hits,
+        segment_lookups=mst.segment_lookups,
+        segment_lookup_s=mst.segment_lookup_time, **lat)
 
 
 def run_cluster_replay(rcfg: ClusterReplayConfig,

@@ -38,6 +38,46 @@ def test_text_blocks_stable_and_sized():
     assert text_blocks("totally different words here")[0] != blocks[0]
 
 
+def test_text_blocks_digest_stability():
+    """Digest regression: chunk boundaries are integer arithmetic
+    (``block_tokens * 3 // 4`` words per block) and the tail rule is
+    explicit, so these exact digests must never drift — content ids are
+    the cross-process identity that dedup, the radix index, the segment
+    index and the fleet-shared tier all key on."""
+    # 240 words = two full 96-word chunks + a 48-word tail (~64 est.
+    # tokens = exactly half a block -> kept as its own block)
+    blocks = text_blocks("the quick brown fox " * 60)
+    assert blocks == [(1217754630,), (1217754630,), (1410415445,)]
+    # repeated text -> identical full-block digests
+    assert blocks[0] == blocks[1]
+
+
+def test_text_blocks_tail_rule():
+    """A trailing fragment estimated under half a block merges into the
+    previous chunk instead of minting a nearly-empty full-size block id;
+    at or above half a block it stands alone."""
+    words = [f"w{i}" for i in range(96)]
+
+    def blk(n):
+        return text_blocks(" ".join(f"w{i}" for i in range(n)))
+
+    full = blk(96)
+    assert len(full) == 1
+    # 47-word tail ~ 63 est. tokens < 64 -> merged (one block, and its
+    # digest differs from the unextended full block)
+    merged = blk(96 + 47)
+    assert len(merged) == 1
+    assert merged[0] != full[0]
+    # 50-word tail ~ 67 est. tokens >= 64 -> its own block; the leading
+    # full block's digest is untouched by the extension
+    kept = blk(96 + 50)
+    assert len(kept) == 2
+    assert kept[0] == full[0]
+    # a single short text is never merged away
+    assert len(text_blocks("just a few words")) == 1
+    del words
+
+
 def test_sharegpt_sessions_shape(tmp_path):
     sessions = load_sessions(_sharegpt_dump(tmp_path))
     assert len(sessions) == 3

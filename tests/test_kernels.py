@@ -217,3 +217,144 @@ def test_paged_prefill_chunk_is_causal():
     np.testing.assert_allclose(np.asarray(out[:, :5]),
                                np.asarray(out2[:, :5]),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment prefill: per-query positions over non-contiguous gaps
+# ---------------------------------------------------------------------------
+def _cpos(rows, c):
+    """[B, C] int32 chunk-position array from per-row position lists
+    (strictly ascending valid entries, -1 padding)."""
+    return jnp.asarray([list(r) + [-1] * (c - len(r)) for r in rows],
+                       jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,hq,hkv,hd,page,pages,rows", [
+    # GQA: two runs straddling a resumed island + a ragged padded row
+    (2, 8, 4, 2, 32, 8, 5, ([3, 4, 5, 6, 21, 22, 23, 24],
+                            [0, 1, 2, 3, 4, 5])),
+    # MHA: page-aligned runs around a whole resumed page
+    (1, 16, 8, 8, 64, 32, 3, ([8, 9, 10, 11, 12, 13, 14, 15,
+                               64, 65, 66, 67, 68, 69, 70, 71],)),
+    # MQA: run crossing a page boundary + a far gap
+    (2, 8, 4, 1, 16, 16, 4, ([5, 6, 7, 8, 9, 50, 51, 52],
+                             [10, 11, 12, 13, 14, 15, 16, 17])),
+])
+def test_paged_prefill_segments_sweep(b, c, hq, hkv, hd, page, pages,
+                                      rows, dtype):
+    from repro.kernels.paged_prefill import paged_prefill_segments
+    n = b * pages + 2
+    q = _arr((b, c, hq, hd), dtype)
+    kc = _arr((b, c, hkv, hd), dtype)
+    vc = _arr((b, c, hkv, hd), dtype)
+    kp = _arr((n, page, hkv, hd), dtype)
+    vp = _arr((n, page, hkv, hd), dtype)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    cpos = _cpos(rows, c)
+    out = paged_prefill_segments(q, kc, vc, kp, vp, bt, cpos,
+                                 interpret=True)
+    exp = ref.paged_prefill_segments_ref(q, kc, vc, kp, vp, bt, cpos)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,c,hq,dl,dr,page,pages,rows", [
+    (2, 8, 4, 32, 8, 16, 4, ([2, 3, 4, 5, 40, 41, 42, 43],
+                             [0, 1, 2, 3, 4])),
+    (1, 8, 8, 64, 16, 32, 2, ([16, 17, 18, 19, 48, 49, 50, 51],)),
+])
+def test_mla_prefill_segments_sweep(b, c, hq, dl, dr, page, pages, rows):
+    from repro.kernels.paged_prefill import mla_paged_prefill_segments
+    n = b * pages + 1
+    ql = _arr((b, c, hq, dl), jnp.float32)
+    qr = _arr((b, c, hq, dr), jnp.float32)
+    lc = _arr((b, c, dl + dr), jnp.float32)
+    lp = _arr((n, page, dl + dr), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    cpos = _cpos(rows, c)
+    out = mla_paged_prefill_segments(ql, qr, lc, lp, bt, cpos,
+                                     d_latent=dl, interpret=True)
+    exp = ref.mla_paged_prefill_segments_ref(ql, qr, lc, lp, bt, cpos, dl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_prefill_segments_degenerate_contiguous():
+    """cpos = offset + arange(C) (one segment, no gaps) must reproduce
+    the scalar-offset kernel exactly — same pages touched, same mask."""
+    from repro.kernels.paged_prefill import (paged_prefill_attention,
+                                             paged_prefill_segments)
+    b, c, hq, hkv, hd, page, pages = 2, 8, 4, 2, 32, 8, 5
+    n = b * pages + 2
+    q = _arr((b, c, hq, hd), jnp.float32)
+    kc = _arr((b, c, hkv, hd), jnp.float32)
+    vc = _arr((b, c, hkv, hd), jnp.float32)
+    kp = _arr((n, page, hkv, hd), jnp.float32)
+    vp = _arr((n, page, hkv, hd), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    offs = (19, 0)
+    off = jnp.asarray(offs, jnp.int32)
+    cpos = _cpos([[o + i for i in range(c)] for o in offs], c)
+    out_seg = paged_prefill_segments(q, kc, vc, kp, vp, bt, cpos,
+                                     interpret=True)
+    out_off = paged_prefill_attention(q, kc, vc, kp, vp, bt, off,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_seg), np.asarray(out_off))
+
+
+def test_mla_prefill_segments_degenerate_contiguous():
+    from repro.kernels.paged_prefill import (mla_paged_prefill,
+                                             mla_paged_prefill_segments)
+    b, c, hq, dl, dr, page, pages = 2, 8, 4, 32, 8, 16, 4
+    n = b * pages + 1
+    ql = _arr((b, c, hq, dl), jnp.float32)
+    qr = _arr((b, c, hq, dr), jnp.float32)
+    lc = _arr((b, c, dl + dr), jnp.float32)
+    lp = _arr((n, page, dl + dr), jnp.float32)
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    offs = (23, 0)
+    off = jnp.asarray(offs, jnp.int32)
+    cpos = _cpos([[o + i for i in range(c)] for o in offs], c)
+    out_seg = mla_paged_prefill_segments(ql, qr, lc, lp, bt, cpos,
+                                         d_latent=dl, interpret=True)
+    out_off = mla_paged_prefill(ql, qr, lc, lp, bt, off, d_latent=dl,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_seg), np.asarray(out_off))
+
+
+def test_paged_prefill_segments_ignore_unresident_slots():
+    """Pool slots the chunk itself will occupy (not yet scattered) and
+    slots at/after the last query position must never contribute."""
+    from repro.kernels.paged_prefill import paged_prefill_segments
+    b, c, hq, hkv, hd, page, pages = 1, 8, 4, 2, 32, 8, 6
+    n = pages + 1
+    positions = [3, 4, 5, 6, 21, 22, 23, 24]
+    q = _arr((b, c, hq, hd), jnp.float32)
+    kc = _arr((b, c, hkv, hd), jnp.float32)
+    vc = _arr((b, c, hkv, hd), jnp.float32)
+    kp = _arr((n, page, hkv, hd), jnp.float32)
+    vp = _arr((n, page, hkv, hd), jnp.float32)
+    bt = jnp.arange(1, n, dtype=jnp.int32).reshape(1, pages)
+    cpos = _cpos([positions], c)
+    out = paged_prefill_segments(q, kc, vc, kp, vp, bt, cpos,
+                                 interpret=True)
+    # poison every pool slot that is a chunk position or >= the last one
+    pool_pos = (jnp.arange(page)[None, :, None, None] +
+                page * jnp.arange(n)[:, None, None, None] - page)
+    own = jnp.zeros_like(pool_pos, bool)
+    for p_ in positions:
+        own = own | (pool_pos == p_)
+    mask = own | (pool_pos >= positions[-1])
+    out2 = paged_prefill_segments(q, kc, vc,
+                                  jnp.where(mask, 999.0, kp),
+                                  jnp.where(mask, 999.0, vp),
+                                  bt, cpos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)

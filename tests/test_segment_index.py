@@ -1,0 +1,143 @@
+"""Property tests (hypothesis) for the content-segment index
+(core/dedup.py SegmentIndex): inserted content is always re-findable,
+matches are disjoint and in prompt order, a single-block mutation loses
+at most its containing segment, and index contents are a pure function
+of the inserted pairs (insertion-order invariant under a fixed salt).
+
+Skips cleanly when hypothesis isn't installed (same guard as
+test_loadgen.py).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dedup import SegmentIndex
+
+BT = 4                                   # small blocks -> fast digests
+
+tokens_st = st.lists(st.integers(0, 7), min_size=BT, max_size=BT * 12)
+
+
+def _full(tokens):
+    """Token list truncated to whole blocks."""
+    return tokens[:(len(tokens) // BT) * BT]
+
+
+def _insert_all(idx, tokens, prefix="b"):
+    blocks = [tokens[i:i + BT] for i in range(0, len(_full(tokens)), BT)]
+    idx.insert_sequence(tokens, [f"{prefix}{i}" for i in range(len(blocks))])
+    return blocks
+
+
+@settings(max_examples=80, deadline=None)
+@given(tokens=tokens_st)
+def test_inserted_always_refindable(tokens):
+    """Every inserted full block matches when queried back: the match
+    over the very tokens just inserted is one segment covering all of
+    them from block 0."""
+    idx = SegmentIndex(BT)
+    blocks = _insert_all(idx, tokens)
+    matches = idx.match(tokens)
+    assert len(matches) == 1
+    assert matches[0].start_block == 0
+    assert matches[0].n_blocks == len(blocks)
+    # and each individual block re-finds via its digest
+    for blk in blocks:
+        assert idx.lookup(idx.block_digest(blk)) is not None
+
+
+@settings(max_examples=80, deadline=None)
+@given(inserted=tokens_st, query=tokens_st)
+def test_matches_disjoint_and_ordered(inserted, query):
+    """Matches never overlap and never reorder: segment spans are
+    strictly ascending and disjoint in block index, each at least
+    min_blocks long, and every reported block id is really registered
+    for that query block's digest."""
+    idx = SegmentIndex(BT, min_blocks=1)
+    _insert_all(idx, inserted)
+    matches = idx.match(query)
+    prev_end = -1
+    qblocks = [query[i:i + BT] for i in range(0, len(_full(query)), BT)]
+    for m in matches:
+        assert m.start_block > prev_end          # disjoint, in order
+        assert m.n_blocks >= idx.min_blocks
+        assert m.end_block <= len(qblocks)
+        for j, bid in enumerate(m.block_ids):
+            d = idx.block_digest(qblocks[m.start_block + j])
+            assert idx.lookup(d) == bid
+        prev_end = m.end_block - 1
+    # blocks outside every segment genuinely miss
+    covered = {i for m in matches for i in range(m.start_block, m.end_block)}
+    for i, blk in enumerate(qblocks):
+        if i not in covered:
+            assert idx.lookup(idx.block_digest(blk)) is None
+
+
+@settings(max_examples=60, deadline=None)
+@given(tokens=st.lists(st.integers(0, 7), min_size=BT * 3,
+                       max_size=BT * 10),
+       data=st.data())
+def test_single_block_mutation_local_loss(tokens, data):
+    """Flipping one token mid-prompt loses at most the containing
+    block: every other full block still matches, so the mutated query
+    yields segments covering exactly the unmutated blocks."""
+    idx = SegmentIndex(BT)
+    blocks = _insert_all(idx, tokens)
+    victim = data.draw(st.integers(0, len(blocks) - 1), label="victim")
+    off = data.draw(st.integers(0, BT - 1), label="offset")
+    pos = victim * BT + off
+    mutated = list(tokens)
+    mutated[pos] = (mutated[pos] + 1) % 8
+    matches = idx.match(mutated)
+    covered = {i for m in matches for i in range(m.start_block, m.end_block)}
+    # the victim block may or may not still hit (its mutated content can
+    # collide with another inserted block) but no *other* block is lost
+    assert covered >= set(range(len(blocks))) - {victim}
+    assert covered <= set(range(len(blocks)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(pairs=st.lists(
+    st.tuples(st.lists(st.integers(0, 7), min_size=BT, max_size=BT),
+              st.integers(0, 9)),
+    min_size=1, max_size=12))
+def test_insertion_order_invariance(pairs):
+    """Index contents are a pure function of the inserted (block, id)
+    pairs: inserting in reverse order yields identical lookups, sizes
+    and canonical ids under a fixed salt."""
+    fwd = SegmentIndex(BT, salt="fixed")
+    rev = SegmentIndex(BT, salt="fixed")
+    for blk, n in pairs:
+        fwd.insert_block(blk, f"id{n}")
+    for blk, n in reversed(pairs):
+        rev.insert_block(blk, f"id{n}")
+    assert fwd.size() == rev.size()
+    for blk, _ in pairs:
+        d = fwd.block_digest(blk)
+        assert rev.block_digest(blk) == d        # same salt, same digest
+        assert fwd.lookup(d) == rev.lookup(d)    # same canonical id
+
+
+@settings(max_examples=40, deadline=None)
+@given(pairs=st.lists(
+    st.tuples(st.lists(st.integers(0, 7), min_size=BT, max_size=BT),
+              st.integers(0, 9)),
+    min_size=2, max_size=10),
+       data=st.data())
+def test_remove_block_unregisters(pairs, data):
+    """Removing a block id leaves the index equal to never having
+    inserted it: its digests fall back to the next-smallest id or
+    vanish."""
+    idx = SegmentIndex(BT, salt="fixed")
+    ref = SegmentIndex(BT, salt="fixed")
+    drop = data.draw(st.integers(0, 9), label="drop")
+    for blk, n in pairs:
+        idx.insert_block(blk, f"id{n}")
+        if n != drop:
+            ref.insert_block(blk, f"id{n}")
+    idx.remove_block(f"id{drop}")
+    assert idx.size() == ref.size()
+    for blk, _ in pairs:
+        d = idx.block_digest(blk)
+        assert idx.lookup(d) == ref.lookup(d)

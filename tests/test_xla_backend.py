@@ -254,6 +254,89 @@ def test_prefill_xla_chunk_is_causal():
 
 
 # ---------------------------------------------------------------------------
+# segment prefill: xla vs oracle vs interpret
+# ---------------------------------------------------------------------------
+def _cpos(rows, c):
+    return jnp.asarray([list(r) + [-1] * (c - len(r)) for r in rows],
+                       jnp.int32)
+
+
+@pytest.mark.parametrize("b,c,hq,hkv,hd,page,pages,rows", [
+    # GQA: two runs around a resumed island + a ragged padded row
+    (2, 8, 4, 2, 32, 8, 5, ([3, 4, 5, 6, 21, 22, 23, 24],
+                            [0, 1, 2, 3, 4, 5])),
+    # MHA: page-aligned runs around a whole resumed page
+    (1, 16, 8, 8, 64, 32, 3, ([8, 9, 10, 11, 12, 13, 14, 15,
+                               64, 65, 66, 67, 68, 69, 70, 71],)),
+    # MQA: run crossing a page boundary + a far gap
+    (2, 8, 4, 1, 16, 16, 4, ([5, 6, 7, 8, 9, 50, 51, 52],
+                             [10, 11, 12, 13, 14, 15, 16, 17])),
+])
+def test_paged_prefill_seg_xla_equivalence(b, c, hq, hkv, hd, page,
+                                           pages, rows):
+    n = b * pages + 2
+    q = _arr((b, c, hq, hd))
+    kc, vc = _arr((b, c, hkv, hd)), _arr((b, c, hkv, hd))
+    kp, vp = _arr((n, page, hkv, hd)), _arr((n, page, hkv, hd))
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    cpos = _cpos(rows, c)
+    out = ops.paged_prefill_seg(q, kc, vc, kp, vp, bt, cpos,
+                                backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.paged_prefill_segments_ref(
+            q, kc, vc, kp, vp, bt, cpos)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ops.paged_prefill_seg(
+            q, kc, vc, kp, vp, bt, cpos, backend="interpret")), **TOL)
+
+
+@pytest.mark.parametrize("b,c,hq,dl,dr,page,pages,rows", [
+    (2, 8, 4, 32, 8, 16, 4, ([2, 3, 4, 5, 40, 41, 42, 43],
+                             [0, 1, 2, 3, 4])),
+    (1, 8, 8, 64, 16, 32, 2, ([16, 17, 18, 19, 48, 49, 50, 51],)),
+])
+def test_mla_prefill_seg_xla_equivalence(b, c, hq, dl, dr, page, pages,
+                                         rows):
+    n = b * pages + 1
+    ql, qr = _arr((b, c, hq, dl)), _arr((b, c, hq, dr))
+    lc, lp = _arr((b, c, dl + dr)), _arr((n, page, dl + dr))
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    cpos = _cpos(rows, c)
+    out = ops.mla_prefill_seg(ql, qr, lc, lp, bt, cpos, d_latent=dl,
+                              backend="xla")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.mla_paged_prefill_segments_ref(
+            ql, qr, lc, lp, bt, cpos, dl)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ops.mla_prefill_seg(
+            ql, qr, lc, lp, bt, cpos, d_latent=dl,
+            backend="interpret")), **TOL)
+
+
+def test_paged_prefill_seg_xla_degenerate_contiguous():
+    """One contiguous segment (cpos = offset + arange) reproduces the
+    scalar-offset dispatcher bit-for-bit on the xla backend."""
+    b, c, hq, hkv, hd, page, pages = 2, 8, 4, 2, 32, 8, 5
+    n = b * pages + 2
+    q = _arr((b, c, hq, hd))
+    kc, vc = _arr((b, c, hkv, hd)), _arr((b, c, hkv, hd))
+    kp, vp = _arr((n, page, hkv, hd)), _arr((n, page, hkv, hd))
+    bt = jnp.asarray(RNG.permutation(n)[:b * pages].reshape(b, pages),
+                     jnp.int32)
+    offs = (19, 0)
+    cpos = _cpos([[o + i for i in range(c)] for o in offs], c)
+    out_seg = ops.paged_prefill_seg(q, kc, vc, kp, vp, bt, cpos,
+                                    backend="xla")
+    out_off = ops.paged_prefill(q, kc, vc, kp, vp, bt,
+                                jnp.asarray(offs, jnp.int32),
+                                backend="xla")
+    np.testing.assert_allclose(np.asarray(out_seg), np.asarray(out_off),
+                               **TOL)
+
+
+# ---------------------------------------------------------------------------
 # engine-level: greedy replay A/B is token-identical across backends
 # ---------------------------------------------------------------------------
 def _greedy_engine_tokens(backend: str):
