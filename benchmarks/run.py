@@ -422,6 +422,94 @@ def segments_benchmark(fast: bool = False, backend: str = None) -> None:
              round(off.wall_s + on.wall_s, 1))
 
 
+def chaos_benchmark(fast: bool = False, backend: str = None) -> None:
+    """Fault-injected serving replay (``--table chaos``): the LMSYS trace
+    through the live engine under seeded tier-fault profiles
+    (``core/faults.py``), sweeping fault severity:
+
+      * ``control`` — no injector attached.  The fault path is inert, so
+        this row must reproduce ``--table segments``'s lmsys
+        segment-reuse cell exactly (same config, same seed).
+      * ``pressure_control`` — fault-free baseline for every faulted
+        row.  The default replay capacities never fill the paper-scale
+        tiers 2-5 (no traffic, so no fault exposure); the faulted cells
+        cap tiers 0-3 at 16 blocks each, cascading real demote/promote
+        traffic into NVMe and the RDMA pool.
+      * ``transient_1e-3`` / ``transient_1e-2`` — per-op transient
+        read/write error rates on tiers 2-5, plus a 10x-lower payload
+        corruption rate.  Transient errors are absorbed by bounded
+        retries (``retries``); exhausted budgets escalate
+        (``io_errors``) and the fetch converts to a recompute; corrupt
+        payloads are caught by the crc gate (``integrity_failures``).
+      * ``nvme_brownout`` — 25% of tier-3 ops land in a 10x latency
+        brownout (inflation shows in TTFT p99 via the stall model, no
+        errors).  ``rdma_flap`` — tier-4 ring nodes flap under
+        in-flight ops, failing them transiently.
+
+    Acceptance invariants asserted per row: zero hung requests
+    (``turns_submitted == requests_done``) and every injected corruption
+    caught by its crc32 check before any payload reaches a decode
+    (``integrity_failures == injected_corruptions``).
+    """
+    from repro.core.faults import FaultProfile
+    from repro.kernels.backend import resolve_backend
+    from repro.traces.serving_replay import (ServingReplayConfig,
+                                             run_serving_replay)
+    print("# Chaos — fault-injected lmsys replay, severity sweep"
+          + (" [fast]" if fast else "")
+          + f" [kernel backend: {resolve_backend(backend)}]")
+    n_sessions = 6 if fast else 12
+    max_turns = 4 if fast else 6
+    pressure = dict(hot_blocks=16, t1_blocks=16, t2_blocks=16,
+                    t3_blocks=16)
+    cells = [("control", None, {}),
+             ("pressure_control", None, pressure)]
+    for rate in (1e-3, 1e-2):
+        cells.append((f"transient_{rate:g}",
+                      {t: FaultProfile(read_error_rate=rate,
+                                       write_error_rate=rate,
+                                       corruption_rate=rate / 10)
+                       for t in (2, 3, 4, 5)}, pressure))
+    cells.append(("nvme_brownout",
+                  {3: FaultProfile(brownout_rate=0.25,
+                                   brownout_latency_mult=10.0)}, pressure))
+    cells.append(("rdma_flap", {4: FaultProfile(flap_rate=0.05)},
+                  pressure))
+    baselines: Dict[str, object] = {}
+    for name, profiles, extra in cells:
+        r = run_serving_replay(ServingReplayConfig(
+            workload="lmsys", policy="bayesian", n_sessions=n_sessions,
+            max_turns=max_turns, kernel_backend=backend,
+            fault_profiles=profiles, fault_seed=7, **extra))
+        cfg_key = repr(sorted(extra.items()))
+        if profiles is None:
+            baselines[cfg_key] = r
+        base = baselines.get(cfg_key)
+        key = f"chaos.lmsys.{name}"
+        hung = r.turns_submitted - r.requests_done
+        corruptions = r.injected.get("injected_corruptions", 0)
+        _row(f"{key}.hit_pct", round(100 * r.engine_hit_rate, 1))
+        _row(f"{key}.ttft_p99_ms", round(1e3 * r.ttft_p99, 1))
+        if profiles is not None and base is not None and base.ttft_p99 > 0:
+            _row(f"{key}.ttft_p99_inflation_x",
+                 round(r.ttft_p99 / base.ttft_p99, 2))
+        _row(f"{key}.retries", r.retries)
+        _row(f"{key}.io_errors", r.io_errors)
+        _row(f"{key}.injected_corruptions", corruptions)
+        _row(f"{key}.integrity_failures", r.integrity_failures, corruptions)
+        _row(f"{key}.fetch_recomputes", r.fetch_recomputes)
+        _row(f"{key}.retry_delay_ms", round(1e3 * r.retry_delay_s, 2))
+        _row(f"{key}.unhealthy_tiers",
+             sum(1 for s in r.tier_health.values() if s != "healthy"), 0)
+        _row(f"{key}.hung_requests", hung, 0)
+        _row(f"{key}.requests", r.requests_done)
+        _row(f"{key}.wall_s", round(r.wall_s, 1))
+        assert hung == 0, f"chaos {name}: {hung} hung requests"
+        assert r.integrity_failures == corruptions, (
+            f"chaos {name}: {corruptions} corruptions injected, "
+            f"{r.integrity_failures} caught")
+
+
 def micro_benchmarks() -> None:
     """System micro-benchmarks backing the paper's latency claims."""
     from repro.core.bayesian import BayesianReusePredictor
@@ -815,7 +903,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--table", default=None,
                     help="run one: 1,3,4,5,6,7,8,9,micro,kernels,serving,"
-                         "ttft,replay,cluster,segments,steploop,slo")
+                         "ttft,replay,cluster,segments,chaos,steploop,slo")
     ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serving benchmark: paged block-table KV path "
@@ -871,6 +959,8 @@ def main() -> None:
         cluster_benchmark(fast=args.fast, backend=args.backend)
     if sel == "segments":
         segments_benchmark(fast=args.fast, backend=args.backend)
+    if sel == "chaos":
+        chaos_benchmark(fast=args.fast, backend=args.backend)
     if sel == "steploop":
         steploop_benchmark(fast=args.fast, backend=args.backend)
     if sel == "slo":

@@ -9,7 +9,11 @@ bound, asserting cross-replica imports actually happen — then a smoke
 run of the fused step-loop microbench, whose host-overhead/kernel-time
 ratio lands in the summary line — then a few seconds of *real-clock*
 serving through the thread-pumped ``ServingFrontend`` at low open-loop
-QPS, asserting goodput == offered and surfacing the measured p99 TTFT.
+QPS, asserting goodput == offered and surfacing the measured p99 TTFT —
+and finally a fault-injected chaos replay (seeded transient I/O errors
+plus payload corruption on tiers 1-5) asserting zero hung requests, at
+least one absorbed retry, and every injected corruption caught by its
+crc32 check before decode.
 
 The smoke also enforces a wall-clock budget (``REPLAY_SMOKE_BUDGET_S``,
 0/unset disables): under the compiled ``xla`` kernel backend the whole
@@ -205,6 +209,37 @@ def frontend_smoke() -> float:
     return st["ttft_p99"]
 
 
+def chaos_smoke() -> tuple:
+    """Fault-injected replay (``core/faults.py``): one session under
+    tier pressure (tiny tier-0/1 capacities force demote/promote traffic
+    through the faulted tiers) with seeded transient read errors and
+    payload corruptions on tiers 1-5.  Every turn must still complete
+    (errors retry, corrupt payloads convert to recompute — nothing
+    hangs), with at least one retry absorbed and every injected
+    corruption caught by its crc32 check before decode."""
+    from repro.core.faults import FaultProfile
+    prof = {t: FaultProfile(read_error_rate=0.25, write_error_rate=0.1,
+                            corruption_rate=0.2) for t in (1, 2, 3, 4, 5)}
+    r = run_serving_replay(ServingReplayConfig(
+        workload="agentic", policy="bayesian", n_sessions=1, max_turns=3,
+        max_steps=2000, async_transfers=False, hot_blocks=4, t1_blocks=8,
+        fault_profiles=prof, fault_seed=3))
+    hung = r.turns_submitted - r.requests_done
+    corruptions = r.injected.get("injected_corruptions", 0)
+    assert hung == 0, f"{hung} requests hung under faults"
+    assert r.retries >= 1, "no transient fault was retried"
+    assert corruptions >= 1, "no corruption was injected"
+    assert r.integrity_failures == corruptions, (
+        f"{corruptions} corruptions injected, "
+        f"{r.integrity_failures} caught")
+    print(f"chaos smoke ok: {r.requests_done}/{r.turns_submitted} turns "
+          f"under faults (0 hung), {r.retries} retries, "
+          f"{r.io_errors} escalations, "
+          f"{r.integrity_failures}/{corruptions} corruptions caught, "
+          f"{r.fetch_recomputes} fetch recomputes, wall {r.wall_s:.1f}s")
+    return r.retries, r.integrity_failures
+
+
 def main() -> None:
     budget_s = float(os.environ.get("REPLAY_SMOKE_BUDGET_S", "0"))
     t0 = time.perf_counter()
@@ -225,6 +260,9 @@ def main() -> None:
     t4 = time.perf_counter()
     frontend_p99 = frontend_smoke()
     t_frontend = time.perf_counter() - t4
+    t5 = time.perf_counter()
+    chaos_retries, chaos_integrity = chaos_smoke()
+    t_chaos = time.perf_counter() - t5
     elapsed = time.perf_counter() - t0
     # the tier-1 pytest step exports its wall time (TIER1_WALL_S) so the
     # job log carries one consolidated timing line
@@ -238,6 +276,9 @@ def main() -> None:
           f"steploop_host_kernel_ratio={steploop_ratio:.2f} "
           f"frontend={t_frontend:.1f}s "
           f"frontend_ttft_p99_ms={frontend_p99 * 1e3:.0f} "
+          f"chaos={t_chaos:.1f}s "
+          f"chaos_retries={chaos_retries} "
+          f"chaos_integrity_catches={chaos_integrity} "
           f"total={elapsed:.1f}s "
           f"budget={budget_s:.0f}s" + (" (disabled)" if not budget_s else ""))
     print(f"pytest -m 'not slow' wall: "

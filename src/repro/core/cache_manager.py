@@ -35,6 +35,8 @@ from repro.core.dedup import (ContentStore, RadixTree, SegmentIndex,
 from repro.core.eviction import (BayesianPolicy, BlockMeta, EMAPolicy,
                                  EvictionPolicy, HeadImportanceTracker,
                                  LRUPolicy)
+from repro.core.faults import (FaultInjector, HealthConfig, RetryPolicy,
+                               TierIOError)
 from repro.core.policy import PlacementPolicy
 from repro.core.prefetch import RoPEPrefetcher
 from repro.core.tiers import (PAPER_TIER_SPECS, CapacityError, FleetKVStore,
@@ -72,6 +74,12 @@ class ManagerStats:
     segment_lookup_time: float = 0.0   # wall seconds spent in segment scans
     fetch_time: float = 0.0
     recompute_time: float = 0.0
+    # fault tolerance (core/faults.py): all zero without an injector
+    retries: int = 0             # transient tier I/O errors absorbed
+    io_errors: int = 0           # ops that exhausted the retry budget
+    integrity_failures: int = 0  # corrupt payloads caught by checksum
+    fetch_recomputes: int = 0    # fetches degraded to recompute
+    tier_health: Dict[int, str] = field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -97,13 +105,19 @@ class PredictiveCacheManager:
                  enable_head_eviction: bool = True,
                  enable_multi_tier: bool = True,
                  hot_tiers: Tuple[int, ...] = (0, 1),
-                 backing_root: Optional[str] = None):
+                 backing_root: Optional[str] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 health_config: Optional[HealthConfig] = None):
         self.cfg = cfg
         self.block_tokens = sizing.block_tokens(cfg)
         self.block_bytes = sizing.block_bytes(cfg)
         self.hierarchy = TierHierarchy(
             specs if enable_multi_tier else specs[:2],
-            backing_root=backing_root)
+            backing_root=backing_root,
+            fault_injector=fault_injector,
+            retry_policy=retry_policy,
+            health_config=health_config)
         self.predictor = BayesianReusePredictor()
         self.head_tracker = (HeadImportanceTracker(cfg)
                              if enable_head_eviction else None)
@@ -151,6 +165,12 @@ class PredictiveCacheManager:
                     view = SharedTierView(store, owner,
                                           resolve_key=self._content_key)
                     view.available = t.available
+                    view.fault_injector = self.hierarchy.fault_injector
+                    if store.tier.fault_injector is None:
+                        # shared store inherits the first bound replica's
+                        # fault model (crc written at publish time)
+                        store.tier.fault_injector = \
+                            self.hierarchy.fault_injector
                     self.hierarchy.tiers[i] = view
                     self._fleet, self._fleet_owner = store, owner
                     self._fleet_view = view
@@ -178,10 +198,15 @@ class PredictiveCacheManager:
                 return False
             try:
                 new_mapping = block_id not in view._map
-                view.write(block_id, self._payloads.get(block_id),
-                           nbytes=meta.nbytes)
+                self.hierarchy.run_io(
+                    view.spec.tier_id,
+                    lambda: view.write(block_id,
+                                       self._payloads.get(block_id),
+                                       nbytes=meta.nbytes))
             except CapacityError:
                 return False           # fleet pool full of live refs
+            except TierIOError:
+                return False           # fabric sick: publish skipped
             if new_mapping:
                 self.stats.shared_publishes += 1
             return True
@@ -209,10 +234,17 @@ class PredictiveCacheManager:
             key = f"c:{h}"
             if not self._fleet.has_payload(key):
                 return None
-            payload, _ = self._fleet.fetch(key)
+            tid = self._fleet.tier.spec.tier_id
+            try:
+                payload, _ = self.hierarchy.run_io(
+                    tid, lambda: self._fleet.fetch(key))
+            except TierIOError:
+                # exhausted retries or corrupt shared copy: the caller
+                # recomputes the block instead of importing garbage
+                self.stats.fetch_recomputes += 1
+                return None
             if payload is None:
                 return None
-            tid = self._fleet.tier.spec.tier_id
             self.stats.shared_tier_hits += 1
             self.stats.tier_hits[tid] = self.stats.tier_hits.get(tid, 0) + 1
             self.stats.fetch_time += \
@@ -255,7 +287,21 @@ class PredictiveCacheManager:
     # ------------------------------------------------------------------
     def tick(self, dt: float = 1.0) -> float:
         self._clock += dt
+        self.hierarchy.tick(dt)      # drives health probes under faults
+        if self.hierarchy.fault_injector is not None:
+            self.sync_fault_stats()
         return self._clock
+
+    def sync_fault_stats(self) -> None:
+        """Copy the hierarchy's fault-tolerance counters into
+        ``ManagerStats`` (absolute values, idempotent) so replay results
+        and fleet aggregation see them without reaching into the
+        hierarchy."""
+        c = self.hierarchy.counters
+        self.stats.retries = c.retries
+        self.stats.io_errors = c.io_errors
+        self.stats.integrity_failures = c.integrity_failures
+        self.stats.tier_health = self.hierarchy.health.as_dict()
 
     @property
     def now(self) -> float:
@@ -386,14 +432,20 @@ class PredictiveCacheManager:
                tier_id: int = 0) -> None:
         self._make_room(tier_id, meta.nbytes)
         try:
-            self.hierarchy[tier_id].write(meta.block_id, payload,
-                                          nbytes=meta.nbytes)
-        except CapacityError:
-            # tier saturated with unevictable blocks -> place lower
+            self.hierarchy.write_tier(tier_id, meta.block_id, payload,
+                                      nbytes=meta.nbytes)
+        except (CapacityError, TierIOError):
+            # tier saturated with unevictable blocks (or sick despite
+            # retries) -> place lower; skip tiers that fail too
             for t in self.hierarchy.active_tiers():
                 if t.spec.tier_id > tier_id and t.free >= meta.nbytes:
-                    t.write(meta.block_id, payload, nbytes=meta.nbytes)
-                    return
+                    try:
+                        self.hierarchy.write_tier(
+                            t.spec.tier_id, meta.block_id, payload,
+                            nbytes=meta.nbytes)
+                        return
+                    except (CapacityError, TierIOError):
+                        continue
 
     def _make_room(self, tier_id: int, nbytes: float,
                    _depth: int = 0) -> None:
@@ -428,7 +480,9 @@ class PredictiveCacheManager:
                 try:
                     self.hierarchy.move(victim.block_id, tier_id, nxt)
                     self.stats.demotions += 1
-                except CapacityError:
+                except (CapacityError, TierIOError):
+                    # destination full, or demotion I/O exhausted its
+                    # retries — the victim was leaving anyway: drop it
                     self._drop_block(victim.block_id)
 
     def _drop_block(self, block_id: str) -> None:
@@ -500,11 +554,28 @@ class PredictiveCacheManager:
                 recomputed = True
                 self._admit(meta, self._payloads.get(block_id))
             elif not hit:
-                self.stats.tier_hits[loc] = self.stats.tier_hits.get(loc, 0) + 1
-                fetch_time = self.hierarchy[loc].spec.transfer_time(meta.nbytes)
-                self.stats.fetch_time += fetch_time
-                # promote into the hot set
-                self._promote(block_id, loc, 0)
+                try:
+                    # promote into the hot set
+                    self._promote(block_id, loc, 0)
+                except TierIOError:
+                    # exhausted retries or a corrupt copy: the fetch
+                    # degrades to a recompute — evict the suspect copy,
+                    # count a miss, and rebuild into the hot set so the
+                    # caller re-prefills instead of hanging or decoding
+                    # garbage
+                    self.hierarchy[loc].evict(block_id)
+                    self.stats.fetch_recomputes += 1
+                    self.stats.cold_misses += 1
+                    self.stats.recompute_time += meta.recompute_cost
+                    recomputed = True
+                    loc = None
+                    self._admit(meta, self._payloads.get(block_id))
+                else:
+                    self.stats.tier_hits[loc] = \
+                        self.stats.tier_hits.get(loc, 0) + 1
+                    fetch_time = \
+                        self.hierarchy[loc].spec.transfer_time(meta.nbytes)
+                    self.stats.fetch_time += fetch_time
             else:
                 self.stats.hot_hits += 1
                 if loc == 0:
@@ -671,6 +742,7 @@ class PredictiveCacheManager:
     # ------------------------------------------------------------------
     def metrics(self) -> dict:
         """Prometheus-style metrics (paper §IV Observability)."""
+        self.sync_fault_stats()
         return {
             "hit_rate_hot": self.stats.hit_rate,
             "hit_rate_replay": self.stats.replay_hit_rate,
@@ -686,6 +758,12 @@ class PredictiveCacheManager:
             "segment_lookups": self.stats.segment_lookups,
             "segment_hits": self.stats.segment_hits,
             "segment_lookup_time": self.stats.segment_lookup_time,
+            "retries": self.stats.retries,
+            "io_errors": self.stats.io_errors,
+            "integrity_failures": self.stats.integrity_failures,
+            "fetch_recomputes": self.stats.fetch_recomputes,
+            "tier_health": dict(self.stats.tier_health),
+            "faults": self.hierarchy.fault_stats(),
             "segment_index": self.segments.stats(),
             "fleet": self._fleet.stats() if self._fleet else {},
             "dedup": self.store.stats() if self.store else {},

@@ -34,6 +34,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import (FaultCounters, FaultInjector, HealthConfig,
+                               HEALTHY, QUARANTINED, RetryPolicy,
+                               TierHealthMonitor, TierIntegrityError,
+                               TierIOError, payload_crc)
+
 
 # ---------------------------------------------------------------------------
 # Published hardware specifications (paper Table II)
@@ -88,6 +93,7 @@ class TierStats:
     bytes_written: float = 0.0
     sim_time: float = 0.0            # accumulated modelled transfer time
     byte_hours: float = 0.0          # for $/Mtok accounting
+    integrity_failures: int = 0      # crc mismatches caught on read
 
     def as_dict(self) -> dict:
         return dataclasses_asdict(self)
@@ -117,6 +123,10 @@ class TierManager:
         self.stats = TierStats()
         self.available = True
         self._dir = backing_dir
+        # fault tolerance: the hierarchy attaches one injector to every
+        # tier; None means the fault hooks below are skipped entirely
+        self.fault_injector: Optional[FaultInjector] = None
+        self._crc: Dict[str, int] = {}
         if backing_dir:
             os.makedirs(backing_dir, exist_ok=True)
 
@@ -126,8 +136,9 @@ class TierManager:
         return os.path.join(self._dir, hashlib.sha256(
             block_id.encode()).hexdigest())
 
-    def _charge(self, nbytes: float, *, read: bool) -> float:
-        t = self.spec.transfer_time(nbytes)
+    def _charge(self, nbytes: float, *, read: bool,
+                mult: float = 1.0) -> float:
+        t = self.spec.transfer_time(nbytes) * mult
         self.stats.sim_time += t
         if read:
             self.stats.reads += 1
@@ -164,10 +175,26 @@ class TierManager:
             self._store[block_id] = None
             self._used += nbytes
 
+    def _verify(self, block_id: str, payload: Optional[np.ndarray],
+                crc: Optional[int]) -> None:
+        """Checksum gate on the read path: a payload whose crc32 does not
+        match what was recorded at write time is corrupt and must never
+        reach a decode — raise instead of returning it."""
+        if crc is None or payload is None:
+            return
+        if payload_crc(payload) != crc:
+            self.stats.integrity_failures += 1
+            raise TierIntegrityError(self.spec.tier_id, "read", block_id)
+
     def write(self, block_id: str, payload: Optional[np.ndarray],
               nbytes: Optional[float] = None) -> float:
-        """Returns modelled transfer time (seconds)."""
+        """Returns modelled transfer time (seconds).  Raises
+        ``TierIOError`` on an injected transient write fault (before any
+        state mutates)."""
         with self._lock:
+            inj, mult = self.fault_injector, 1.0
+            if inj is not None:
+                mult = inj.check_write(self.spec.tier_id, block_id)
             if block_id not in self._sizes:
                 size = float(nbytes if nbytes is not None
                              else (payload.nbytes if payload is not None else 0))
@@ -178,22 +205,53 @@ class TierManager:
                 self._store[block_id] = None
             else:
                 self._store[block_id] = payload
-            return self._charge(size, read=False)
+            if inj is not None and payload is not None:
+                self._crc[block_id] = payload_crc(payload)
+            return self._charge(size, read=False, mult=mult)
 
     def read(self, block_id: str) -> Tuple[Optional[np.ndarray], float]:
-        """Returns (payload, modelled transfer time)."""
+        """Returns (payload, modelled transfer time).  Raises
+        ``TierIOError`` on an injected transient fault and
+        ``TierIntegrityError`` when the payload fails its checksum."""
         with self._lock:
             if not self.available:
                 raise CapacityError(f"tier {self.spec.name} unavailable")
             if block_id not in self._sizes:
                 raise KeyError(block_id)
+            inj, mult = self.fault_injector, 1.0
+            if inj is not None:
+                mult = inj.check_read(self.spec.tier_id, block_id)
             size = self._sizes[block_id]
             payload = self._store.get(block_id)
             if payload is None and self._dir is not None:
                 path = self._path(block_id) + ".npy"
                 if os.path.exists(path):
                     payload = np.load(path)
-            return payload, self._charge(size, read=True)
+            if inj is not None and payload is not None:
+                payload = inj.maybe_corrupt(self.spec.tier_id, block_id,
+                                            payload)
+                self._verify(block_id, payload, self._crc.get(block_id))
+            return payload, self._charge(size, read=True, mult=mult)
+
+    def attach_payload(self, block_id: str,
+                       payload: Optional[np.ndarray]) -> None:
+        """Backfill stored bytes for a block that was allocated
+        metadata-first (prompt blocks register before the engine extracts
+        their KV arrays from the pool).  Not a modelled I/O: no transfer
+        time is charged and no fault is drawn — it only makes later
+        demotions/promotions carry (and checksum-gate) real payloads."""
+        if payload is None:
+            return
+        with self._lock:
+            if block_id not in self._sizes \
+                    or self._store.get(block_id) is not None:
+                return
+            if self._dir is not None:
+                np.save(self._path(block_id) + ".npy", payload)
+            else:
+                self._store[block_id] = payload
+            if self.fault_injector is not None:
+                self._crc[block_id] = payload_crc(payload)
 
     def evict(self, block_id: str) -> None:
         with self._lock:
@@ -201,6 +259,7 @@ class TierManager:
                 return
             self._used -= self._sizes.pop(block_id)
             self._store.pop(block_id, None)
+            self._crc.pop(block_id, None)
             self.stats.evictions += 1
             if self._dir is not None:
                 path = self._path(block_id) + ".npy"
@@ -293,6 +352,19 @@ class RDMATier(TierManager):
     def placement(self, block_id: str) -> str:
         return self.ring.lookup(block_id)
 
+    def read(self, block_id: str) -> Tuple[Optional[np.ndarray], float]:
+        inj = self.fault_injector
+        if inj is not None:
+            inj.maybe_flap(self, "read", block_id)
+        return super().read(block_id)
+
+    def write(self, block_id: str, payload: Optional[np.ndarray],
+              nbytes: Optional[float] = None) -> float:
+        inj = self.fault_injector
+        if inj is not None:
+            inj.maybe_flap(self, "write", block_id)
+        return super().write(block_id, payload, nbytes=nbytes)
+
     def allocate(self, block_id: str, nbytes: float) -> None:
         super().allocate(block_id, nbytes)
         node = self.placement(block_id)
@@ -357,9 +429,11 @@ class FleetKVStore:
 
     def __init__(self, spec: Optional[TierSpec] = None,
                  nodes: Sequence[str] = ("node0", "node1", "node2", "node3"),
-                 vnodes: int = 64):
+                 vnodes: int = 64,
+                 fault_injector: Optional[FaultInjector] = None):
         spec = PAPER_TIER_SPECS[4] if spec is None else spec
         self.tier = RDMATier(spec, nodes=nodes, vnodes=vnodes)
+        self.tier.fault_injector = fault_injector
         self._refs: Dict[str, int] = {}
         self._lock = threading.RLock()
         self.publishes = 0             # writes that added new bytes
@@ -391,6 +465,8 @@ class FleetKVStore:
                 self._refs[key] = self._refs.get(key, 0) + 1
                 if payload is not None and self.tier._store.get(key) is None:
                     self.tier._store[key] = payload
+                    if self.tier.fault_injector is not None:
+                        self.tier._crc[key] = payload_crc(payload)
                 self.dedup_publishes += 1
                 return False
             self._make_room(nbytes)
@@ -404,6 +480,8 @@ class FleetKVStore:
             if self.tier.contains(key) and \
                     self.tier._store.get(key) is None:
                 self.tier._store[key] = payload
+                if self.tier.fault_injector is not None:
+                    self.tier._crc[key] = payload_crc(payload)
 
     def release(self, key: str) -> None:
         """Drop one owner reference.  Zero-ref keys stay resident (the
@@ -517,6 +595,9 @@ class SharedTierView(TierManager):
     def write(self, block_id: str, payload: Optional[np.ndarray],
               nbytes: Optional[float] = None) -> float:
         with self._lock:
+            inj, mult = self.fault_injector, 1.0
+            if inj is not None:
+                mult = inj.check_write(self.spec.tier_id, block_id)
             key = self._map.get(block_id)
             if key is not None and not self.fleet.contains_key(key):
                 # the fleet copy died (total node loss): drop the stale
@@ -531,7 +612,7 @@ class SharedTierView(TierManager):
                 key = self._map[block_id]
             if payload is not None:
                 self.fleet.put_payload(key, payload)
-            return self._charge(self._sizes[block_id], read=False)
+            return self._charge(self._sizes[block_id], read=False, mult=mult)
 
     def read(self, block_id: str) -> Tuple[Optional[np.ndarray], float]:
         with self._lock:
@@ -540,8 +621,17 @@ class SharedTierView(TierManager):
             key = self._map.get(block_id)
             if key is None or not self.fleet.contains_key(key):
                 raise KeyError(block_id)
+            inj, mult = self.fault_injector, 1.0
+            if inj is not None:
+                mult = inj.check_read(self.spec.tier_id, block_id)
             payload = self.fleet.peek(key)
-            return payload, self._charge(self._sizes[block_id], read=True)
+            if inj is not None and payload is not None:
+                payload = inj.maybe_corrupt(self.spec.tier_id, block_id,
+                                            payload)
+                self._verify(block_id, payload,
+                             self.fleet.tier._crc.get(key))
+            return payload, self._charge(self._sizes[block_id], read=True,
+                                         mult=mult)
 
     def evict(self, block_id: str) -> None:
         with self._lock:
@@ -558,12 +648,24 @@ class SharedTierView(TierManager):
 # The hierarchy
 # ---------------------------------------------------------------------------
 class TierHierarchy:
-    """Ordered tier stack with promote/demote and failure handling."""
+    """Ordered tier stack with promote/demote and failure handling.
+
+    With a ``fault_injector`` attached, every tier's read/write can
+    raise ``TierIOError``; the hierarchy wraps its own transfer paths
+    (``move`` / ``read_tier`` / ``write_tier``) in the ``RetryPolicy``
+    and feeds per-op outcomes to a per-tier health state machine that
+    quarantines repeatedly-failing tiers (routing demotions around them
+    via the same ``available`` flag ``fail_tier`` uses) and probes them
+    back to health.  Without an injector none of this runs — the fault
+    layer is completely inert."""
 
     def __init__(self, specs: Sequence[TierSpec] = PAPER_TIER_SPECS,
                  *, backing_root: Optional[str] = None,
                  rdma_nodes: Sequence[str] = ("node0", "node1", "node2",
-                                              "node3")):
+                                              "node3"),
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 health_config: Optional[HealthConfig] = None):
         self.tiers: List[TierManager] = []
         for spec in specs:
             if spec.tier_id == 4:
@@ -573,6 +675,130 @@ class TierHierarchy:
                            if backing_root and spec.tier_id >= 3 else None)
                 self.tiers.append(TierManager(spec, backing_dir=backing))
         self._lock = threading.RLock()
+        self.fault_injector = fault_injector
+        for t in self.tiers:
+            t.fault_injector = fault_injector
+        if retry_policy is None and fault_injector is not None:
+            retry_policy = RetryPolicy()
+        self.retry_policy = retry_policy
+        self._retry_rng = np.random.default_rng(
+            retry_policy.seed if retry_policy is not None else 0)
+        self.health = TierHealthMonitor(len(self.tiers), health_config)
+        self.counters = FaultCounters()
+        self.clock = 0.0
+
+    # -- fault-tolerant I/O -------------------------------------------------
+    def run_io(self, tier_id: int, fn):
+        """Run one tier I/O op under the retry policy + health tracking.
+
+        Transient ``TierIOError``s are retried with modelled backoff
+        (virtual seconds accumulated in ``counters.retry_delay_s`` — no
+        wall sleeps); integrity errors escalate immediately (the copy is
+        corrupt, re-reading cannot help the caller decode it safely);
+        exhaustion of the attempt/deadline budget re-raises the last
+        error.  ``KeyError``/``CapacityError`` pass through untouched.
+        Fast path: with no injector attached this is just ``fn()``."""
+        if self.fault_injector is None:
+            return fn()
+        policy = self.retry_policy
+        attempt, cum = 0, 0.0
+        while True:
+            attempt += 1
+            try:
+                out = fn()
+            except TierIntegrityError:
+                with self._lock:
+                    self.counters.integrity_failures += 1
+                    self._record_health(tier_id, ok=False)
+                raise
+            except TierIOError:
+                with self._lock:
+                    self._record_health(tier_id, ok=False)
+                    if policy is None or attempt >= policy.max_attempts:
+                        self.counters.io_errors += 1
+                        raise
+                    d = policy.delay(attempt, self._retry_rng)
+                    if cum + d > policy.deadline_s:
+                        self.counters.io_errors += 1
+                        raise
+                    cum += d
+                    self.counters.retries += 1
+                    self.counters.retry_delay_s += d
+            else:
+                with self._lock:
+                    self._record_health(tier_id, ok=True)
+                return out
+
+    def _record_health(self, tier_id: int, *, ok: bool) -> None:
+        before = self.health.state(tier_id)
+        rec = (self.health.record_success if ok
+               else self.health.record_failure)
+        after = rec(tier_id, self.clock)
+        if after == QUARANTINED and before != QUARANTINED:
+            # reuse the fail_tier routing: an unavailable tier drops out
+            # of locate() and the demotion graph until a probe recovers it
+            self.tiers[tier_id].available = False
+            self.counters.quarantines += 1
+
+    def read_tier(self, tier_id: int,
+                  block_id: str) -> Tuple[Optional[np.ndarray], float]:
+        t = self.tiers[tier_id]
+        return self.run_io(tier_id, lambda: t.read(block_id))
+
+    def write_tier(self, tier_id: int, block_id: str,
+                   payload: Optional[np.ndarray],
+                   nbytes: Optional[float] = None) -> float:
+        t = self.tiers[tier_id]
+        return self.run_io(
+            tier_id, lambda: t.write(block_id, payload, nbytes=nbytes))
+
+    def attach_payload(self, block_id: str,
+                       payload: Optional[np.ndarray]) -> None:
+        """Backfill bytes for a metadata-first block wherever it lives
+        (free: no fault draw, no time charged — see TierManager)."""
+        tid = self.locate(block_id)
+        if tid is not None:
+            self.tiers[tid].attach_payload(block_id, payload)
+
+    def tick(self, dt: float = 1.0) -> None:
+        """Advance the hierarchy's virtual clock (drives health probes)."""
+        self.clock += dt
+        if self.fault_injector is not None:
+            self.probe_quarantined()
+
+    def probe_quarantined(self) -> None:
+        """Issue recovery probes for quarantined tiers whose probe
+        interval has elapsed; a successful probe restores routing."""
+        with self._lock:
+            for t in self.tiers:
+                tid = t.spec.tier_id
+                if not self.health.due_probe(tid, self.clock):
+                    continue
+                ok = self._probe_tier(tid)
+                self.counters.probes += 1
+                st = self.health.probe_result(tid, ok, self.clock)
+                if st == HEALTHY:
+                    self.restore_tier(tid)
+                    self.counters.probe_recoveries += 1
+
+    def _probe_tier(self, tier_id: int) -> bool:
+        """One probe round-trip (write + read + evict of a sentinel)
+        through the quarantined tier with faults live."""
+        t = self.tiers[tier_id]
+        probe_id = f"__probe_t{tier_id}__"
+        t.available = True
+        try:
+            t.write(probe_id, None, nbytes=1.0)
+            t.read(probe_id)
+            return True
+        except Exception:                     # noqa: BLE001
+            return False
+        finally:
+            try:
+                t.evict(probe_id)
+            except Exception:                 # noqa: BLE001
+                pass
+            t.available = False
 
     def __getitem__(self, tier_id: int) -> TierManager:
         return self.tiers[tier_id]
@@ -599,10 +825,11 @@ class TierHierarchy:
             s, d = self.tiers[src], self.tiers[dst]
             if not s.contains(block_id):
                 raise KeyError(f"{block_id} not in tier {src}")
-            data, t_read = s.read(block_id)
+            data, t_read = self.run_io(src, lambda: s.read(block_id))
             nbytes = s.size_of(block_id)
-            t_write = d.write(block_id, payload if payload is not None
-                              else data, nbytes=nbytes)
+            t_write = self.run_io(
+                dst, lambda: d.write(block_id, payload if payload is not None
+                                     else data, nbytes=nbytes))
             s.evict(block_id)
             return t_read + t_write
 
@@ -651,8 +878,23 @@ class TierHierarchy:
         """Cumulative capacity of tiers 0..tier_id (paper Table IV col 2)."""
         return sum(t.spec.capacity for t in self.tiers[:tier_id + 1])
 
+    def fault_stats(self) -> dict:
+        """Fault-tolerance accounting + injected-fault counts + health."""
+        out = dataclasses_asdict(self.counters)
+        out["tier_health"] = {t.spec.tier_id:
+                              self.health.state(t.spec.tier_id)
+                              for t in self.tiers}
+        if self.fault_injector is not None:
+            out["injected"] = self.fault_injector.stats()
+        return out
+
     def stats(self) -> List[dict]:
-        return [t.stats_dict() for t in self.tiers]
+        out = []
+        for t in self.tiers:
+            d = t.stats_dict()
+            d["health"] = self.health.state(t.spec.tier_id)
+            out.append(d)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -672,6 +914,8 @@ class TransferRequest:
     # custom: callable(hierarchy) -> (sim_time, payload | None)
     execute: Optional[Callable] = None
     ticket: int = 0
+    timeout_s: Optional[float] = None   # per-transfer wall deadline
+    #                                     (None -> worker default)
 
 
 @dataclass
@@ -697,10 +941,20 @@ class AsyncTierTransferWorker:
     arrive before the write finishes are served from the buffer for free.
     """
 
-    def __init__(self, hierarchy: TierHierarchy, name: str = "kv-transfer"):
+    def __init__(self, hierarchy: TierHierarchy, name: str = "kv-transfer",
+                 *, fault_injector: Optional[FaultInjector] = None,
+                 default_timeout_s: Optional[float] = 30.0):
         self.hierarchy = hierarchy
+        self.fault_injector = (fault_injector if fault_injector is not None
+                               else hierarchy.fault_injector)
+        self.default_timeout_s = default_timeout_s
         self._staging: List[TransferRequest] = []
         self._completed: Deque[TransferEvent] = deque()
+        # ticket -> (request, t0_wall, deadline_wall | None): transfers an
+        # injected fault stalled forever.  They still count as in-flight
+        # until their deadline expires into a failed TransferEvent.
+        self._stalled: Dict[int, Tuple[TransferRequest, float,
+                                       Optional[float]]] = {}
         self._cv = threading.Condition()
         self._stop = False
         self._inflight = 0
@@ -708,6 +962,8 @@ class AsyncTierTransferWorker:
         self.submitted = 0
         self.completed = 0
         self.failed = 0
+        self.timeouts = 0
+        self.stalled_total = 0
         self.max_inflight = 0
         self.sim_time_total = 0.0
         self.wall_ms_total = 0.0
@@ -729,21 +985,55 @@ class AsyncTierTransferWorker:
         return req.ticket
 
     def poll(self) -> List[TransferEvent]:
-        """Completion events since the last poll (non-blocking)."""
+        """Completion events since the last poll (non-blocking).  Also
+        sweeps stalled transfers past their deadline into failed
+        events, so the step loop sees timeouts without a worker wakeup."""
         with self._cv:
+            self._expire_stalled_locked()
             out = list(self._completed)
             self._completed.clear()
         return out
 
-    def drain(self, timeout: float = 10.0) -> bool:
-        """Block until every submitted transfer has completed."""
+    def drain(self, timeout: float = 10.0, *, escalate: bool = False) -> bool:
+        """Block until every submitted transfer has completed.  With
+        ``escalate=True`` the drain deadline is enforced: transfers still
+        stalled when it expires are shed as failed ``TransferEvent``s
+        (error="transfer timeout") so shutdown can never hang on an
+        injected stall.  Returns True when nothing is left in flight."""
         deadline = time.monotonic() + timeout
         with self._cv:
             while self._inflight > 0:
+                self._expire_stalled_locked()
+                if self._inflight == 0:
+                    break
                 remaining = deadline - time.monotonic()
-                if remaining <= 0 or not self._cv.wait(remaining):
+                if remaining <= 0:
+                    if escalate:
+                        self._expire_stalled_locked(force=True)
                     return self._inflight == 0
+                self._cv.wait(min(remaining, 0.05))
             return True
+
+    def _expire_stalled_locked(self, force: bool = False) -> None:
+        """Turn stalled transfers whose deadline passed (or all of them,
+        with ``force``) into failed completion events.  Caller holds
+        ``_cv``."""
+        if not self._stalled:
+            return
+        now = time.monotonic()
+        for ticket in list(self._stalled):
+            req, t0, dl = self._stalled[ticket]
+            if not force and (dl is None or now - t0 < dl):
+                continue
+            del self._stalled[ticket]
+            ev = TransferEvent(req, False, 0.0, (now - t0) * 1e3, None,
+                               "transfer timeout")
+            self._completed.append(ev)
+            self._inflight -= 1
+            self.completed += 1
+            self.failed += 1
+            self.timeouts += 1
+        self._cv.notify_all()
 
     def close(self) -> None:
         with self._cv:
@@ -756,6 +1046,9 @@ class AsyncTierTransferWorker:
             return {"submitted": self.submitted,
                     "completed": self.completed,
                     "failed": self.failed,
+                    "timeouts": self.timeouts,
+                    "stalled": len(self._stalled),
+                    "stalled_total": self.stalled_total,
                     "in_flight": self._inflight,
                     "max_inflight": self.max_inflight,
                     "sim_time_total": self.sim_time_total,
@@ -766,11 +1059,26 @@ class AsyncTierTransferWorker:
         while True:
             with self._cv:
                 while not self._staging and not self._stop:
-                    self._cv.wait()
+                    if self._stalled:
+                        # wake periodically to expire stalled transfers
+                        self._cv.wait(0.05)
+                        self._expire_stalled_locked()
+                    else:
+                        self._cv.wait()
                 if self._stop and not self._staging:
                     return
                 active, self._staging = self._staging, []   # buffer swap
             for req in active:
+                inj = self.fault_injector
+                if inj is not None and inj.should_stall(
+                        req.src, req.block_id, req.kind):
+                    with self._cv:
+                        dl = (req.timeout_s if req.timeout_s is not None
+                              else self.default_timeout_s)
+                        self._stalled[req.ticket] = (req, time.monotonic(),
+                                                     dl)
+                        self.stalled_total += 1
+                    continue
                 ev = self._execute(req)
                 with self._cv:
                     self._completed.append(ev)
@@ -793,10 +1101,12 @@ class AsyncTierTransferWorker:
                     sim = self.hierarchy.move(req.block_id, req.src, req.dst,
                                               payload=req.payload)
                 else:
-                    sim = self.hierarchy[req.dst].write(
-                        req.block_id, req.payload, nbytes=req.nbytes)
+                    sim = self.hierarchy.write_tier(
+                        req.dst, req.block_id, req.payload,
+                        nbytes=req.nbytes)
             elif req.kind == "fetch":
-                payload, sim = self.hierarchy[req.src].read(req.block_id)
+                payload, sim = self.hierarchy.read_tier(req.src,
+                                                        req.block_id)
                 if req.evict_src:
                     self.hierarchy[req.src].evict(req.block_id)
             elif req.kind == "promote":

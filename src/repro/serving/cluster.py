@@ -372,10 +372,19 @@ class ReplicaCluster:
                 self._session_replica[req.session_id] = target
             self.redispatched += 1
             self.redispatch_log.append((req.request_id, name, target))
+        eng.manager.sync_fault_stats()
         self.failed_stats[name] = eng.manager.stats
         self.failed_done[name] = len(eng.scheduler.done)
         eng.release_resources()
         return len(lost)
+
+    def cancel_request(self, request: Request) -> bool:
+        """Cancel one live request wherever it lives (frontend drain-
+        deadline shedding); returns True when an engine released it."""
+        for eng in self.engines.values():
+            if eng.cancel_request(request):
+                return True
+        return False
 
     # -- dispatch -----------------------------------------------------------
     def route(self, session_key: str,
@@ -432,20 +441,37 @@ class ReplicaCluster:
                       ) -> Dict[str, ManagerStats]:
         """Per-replica ``ManagerStats`` (failed replicas retain theirs
         for fleet aggregation)."""
-        out = {n: e.manager.stats for n, e in self.engines.items()}
+        out = {}
+        for n, e in self.engines.items():
+            e.manager.sync_fault_stats()
+            out[n] = e.manager.stats
         if include_failed:
             out.update(self.failed_stats)
         return out
 
+    # quarantined beats probing beats degraded beats healthy when two
+    # replicas disagree about the same tier id in the fleet rollup
+    _HEALTH_RANK = {"healthy": 0, "degraded": 1, "probing": 2,
+                    "quarantined": 3}
+
     def fleet_manager_stats(self) -> ManagerStats:
         """Fleet-wide rollup: field-wise sum over every replica that
-        ever served traffic (hit rates derive from the summed counts)."""
+        ever served traffic (hit rates derive from the summed counts).
+        ``tier_health`` merges worst-state-wins per tier id."""
         agg = ManagerStats()
         for ms in self.manager_stats().values():
             for f in dataclasses.fields(ManagerStats):
                 if f.name == "tier_hits":
                     for t, n in ms.tier_hits.items():
                         agg.tier_hits[t] = agg.tier_hits.get(t, 0) + n
+                elif f.name == "tier_health":
+                    for t, st in ms.tier_health.items():
+                        cur = agg.tier_health.get(t, "healthy")
+                        if self._HEALTH_RANK.get(st, 0) > \
+                                self._HEALTH_RANK.get(cur, 0):
+                            agg.tier_health[t] = st
+                        else:
+                            agg.tier_health.setdefault(t, cur)
                 else:
                     setattr(agg, f.name,
                             getattr(agg, f.name) + getattr(ms, f.name))

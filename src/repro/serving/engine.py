@@ -95,6 +95,16 @@ class EngineConfig:
     #                                   pool-resident blocks mid-prompt
     #                                   beyond the contiguous radix prefix
     #                                   (False: monolithic-radix A/B)
+    fault_injector: Optional[object] = None   # core/faults.FaultInjector:
+    #                                   seeded per-tier fault model threaded
+    #                                   through the manager's hierarchy and
+    #                                   the transfer worker (None: the fault
+    #                                   layer is completely inert)
+    retry_policy: Optional[object] = None     # core/faults.RetryPolicy
+    #                                   (None + injector -> defaults)
+    transfer_timeout_s: float = 30.0  # async transfer wall deadline: a
+    #                                   stalled transfer is shed as a failed
+    #                                   TransferEvent after this long
     fused_step: bool = True           # decode attention + logits + sampling
     #                                   in ONE jitted closure with the KV
     #                                   state donated through it and the
@@ -197,9 +207,13 @@ class ServingEngine:
             cfg, specs=tuple(specs), policy=engine_cfg.policy,
             enable_dedup=engine_cfg.enable_dedup,
             enable_prefetch=engine_cfg.enable_prefetch,
-            enable_multi_tier=engine_cfg.enable_multi_tier)
-        self.worker = (AsyncTierTransferWorker(self.manager.hierarchy)
-                       if engine_cfg.async_transfers else None)
+            enable_multi_tier=engine_cfg.enable_multi_tier,
+            fault_injector=engine_cfg.fault_injector,
+            retry_policy=engine_cfg.retry_policy)
+        self.worker = (AsyncTierTransferWorker(
+            self.manager.hierarchy,
+            default_timeout_s=engine_cfg.transfer_timeout_s)
+            if engine_cfg.async_transfers else None)
         self.chunked = (engine_cfg.chunked_prefill and self.paged
                         and self.model.supports_chunked_prefill())
         self._rng = jax.random.PRNGKey(engine_cfg.seed + 1)
@@ -459,7 +473,12 @@ class ServingEngine:
             recompute_cost_per_block=self._block_recompute_cost())
         for i, bid in enumerate(new_ids):
             if bid not in mgr._payloads:
-                mgr._payloads[bid] = self.kv.extract_block(slot, i * bt, bt)
+                pl = self.kv.extract_block(slot, i * bt, bt)
+                mgr._payloads[bid] = pl
+                # registration admitted the block metadata-first; give its
+                # tier copy the real bytes so demotions checksum and move
+                # actual payloads, not placeholders
+                mgr.hierarchy.attach_payload(bid, pl)
             if self.paged:
                 self.kv.register_block_pages(bid, slot, i * bt, bt)
             if mgr.fleet_bound:
@@ -660,7 +679,12 @@ class ServingEngine:
                 if ev.ok and ev.payload is not None and ent is not None:
                     ent[0] = ev.payload
                 else:
-                    # payload lost: recovery re-prefills the full context
+                    # payload lost (exhausted retries, corrupt copy, or
+                    # transfer timeout): recovery re-prefills the full
+                    # context — the blocked request unblocks instead of
+                    # hanging on a dead tier
+                    if ent is not None and not ev.ok:
+                        self.manager.stats.fetch_recomputes += 1
                     self._preempted_payloads.pop(rid, None)
                 self.scheduler.on_transfer_complete(rid)
             elif req.tag == "prefetch":
@@ -947,11 +971,49 @@ class ServingEngine:
             out["decode_state_rebuilds"] = self.kv.state_rebuilds
         if self.worker is not None:
             out["async_transfers"] = self.worker.stats()
+        out["faults"] = self.manager.hierarchy.fault_stats()
         return out
+
+    def cancel_request(self, req: Request) -> bool:
+        """Drop one live request from every scheduler queue and release
+        its resources (slot pages via ``kv.release``, dedup refs via
+        ``release_sequence``, staged preempt payloads) — the frontend's
+        drain-deadline shed path.  Returns False when the request is not
+        live on this engine (already finished, or another replica's)."""
+        sch = self.scheduler
+        rid = req.request_id
+        found = False
+        if rid in sch.running:
+            sch.running.pop(rid)
+            if req.slot is not None and req.slot >= 0:
+                self.kv.release(req.slot)
+            found = True
+        elif rid in sch.blocked:
+            sch.blocked.pop(rid)
+            found = True
+        elif req in sch.waiting:
+            sch.waiting.remove(req)
+            found = True
+        elif req in sch.preempted:
+            sch.preempted.remove(req)
+            found = True
+        if not found:
+            return False
+        self.manager.release_sequence(req.block_ids,
+                                      retain=req.retain_blocks)
+        self._preempted_payloads.pop(rid, None)
+        self._demote_tickets.pop(rid, None)
+        self._drop_tier_copy(rid)
+        req.phase = Phase.DONE
+        if self.paged:
+            self.kv.gc_blocks(self.manager)
+        return True
 
     def shutdown(self) -> None:
         if self.worker is not None:
-            self.worker.drain(timeout=5.0)
+            # escalate at the deadline: injected stalls become failed
+            # TransferEvents instead of a hung shutdown
+            self.worker.drain(timeout=5.0, escalate=True)
             self.worker.close()
             self.worker = None
 

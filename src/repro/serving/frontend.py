@@ -495,24 +495,55 @@ class ServingFrontend:
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
         """Clean shutdown.  With ``drain=True`` (default) the pump keeps
         running until every accepted request is terminal — no request is
-        leaked — then the thread exits and the engine(s) shut down."""
+        leaked — then the thread exits and the engine(s) shut down.
+
+        The drain is *bounded*: a request stuck behind a dead tier or a
+        permanently stalled transfer cannot hold shutdown hostage.  At
+        the drain deadline every still-open submission is cancelled in
+        the engine (freeing its decode slot and KV blocks) and marked
+        shed, so the ledger still balances (``offered == shed + done``)
+        and ``check_ledger`` passes after a chaotic shutdown."""
         if self._thread is not None:
             if drain:
                 deadline = time.monotonic() + timeout
                 while self.in_flight() > 0:
                     if time.monotonic() >= deadline:
-                        raise TimeoutError(
-                            f"drain did not finish within {timeout}s "
-                            f"({self.in_flight()} requests in flight)")
+                        self._shed_stuck()
+                        break
                     time.sleep(1e-3)
             self._stop.set()
             self._thread.join(timeout=timeout)
             self._thread = None
         elif drain:
+            deadline = self.clock.monotonic() + timeout
             while self.in_flight() > 0:
+                if self.clock.monotonic() >= deadline:
+                    self._shed_stuck()
+                    break
                 self.pump_once()
         self._closed = True
         self.engine.shutdown()
+
+    def _shed_stuck(self) -> None:
+        """Drain-deadline escalation: cancel every open submission.
+
+        Engine-resident requests are cancelled through
+        ``cancel_request`` (slot released, KV blocks freed, tier copies
+        dropped); inbox/queue entries never reached the engine and are
+        shed directly.  Each open handle reaches its terminal state
+        exactly once, preserving the ledger invariant."""
+        with self._lock:
+            pending = list(self._inbox) + list(self._queue)
+            self._inbox.clear()
+            self._queue.clear()
+            stuck = [self._active.pop(rid) for rid in sorted(self._active)]
+        for h in pending:
+            self._terminal_shed(h)
+        for h in stuck:
+            if h.request is not None and hasattr(self.engine,
+                                                "cancel_request"):
+                self.engine.cancel_request(h.request)
+            self._terminal_shed(h)
 
     # -- accounting ---------------------------------------------------------
     def in_flight(self) -> int:

@@ -80,6 +80,7 @@ import numpy as np
 
 from repro.config import ModelConfig, reduce_config
 from repro.core import sizing
+from repro.core.faults import FaultInjector, FaultProfile
 from repro.serving.cluster import ReplicaCluster, make_router
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.request import Phase, Request, SamplingParams
@@ -129,6 +130,10 @@ class ServingReplayConfig:
     n_slots: int = 8                    # target decode concurrency
     hot_blocks: Optional[int] = None    # tier-0 capacity (None: per-workload)
     t1_blocks: Optional[int] = None     # tier-1 capacity (None: per-workload)
+    t2_blocks: Optional[int] = None     # cap CXL blocks (None: paper scale;
+    #                                     the chaos table caps it to push
+    #                                     demotion traffic into NVMe/RDMA)
+    t3_blocks: Optional[int] = None     # cap NVMe blocks likewise
     async_transfers: bool = True        # real async worker path; False runs
     #                                     transfers inline — bit-for-bit
     #                                     deterministic (thread completion
@@ -168,6 +173,17 @@ class ServingReplayConfig:
     #                                     matching blocks mid-prompt beyond
     #                                     the contiguous radix prefix
     #                                     (False: monolithic-radix A/B)
+    # --- fault injection (chaos replay) -----------------------------------
+    fault_profiles: Optional[Dict[int, FaultProfile]] = None
+    #                                     per-tier chaos profiles; None
+    #                                     attaches no injector, and the
+    #                                     fault path is fully inert — the
+    #                                     replay reproduces the fault-free
+    #                                     numbers bit-identically
+    fault_seed: int = 0                 # injector RNG seed
+    transfer_timeout_s: float = 30.0    # async transfer watchdog (wall s);
+    #                                     expired transfers come back as
+    #                                     failed events -> recompute
     max_steps: int = 50_000
 
 
@@ -227,6 +243,18 @@ class ServingReplayResult:
     segment_inject_hits: int = 0   # engine: resumed by payload inject
     segment_lookups: int = 0       # manager: match_segments calls
     segment_lookup_s: float = 0.0  # manager: wall time in those lookups
+    # fault injection / robustness (zeros when fault_profiles is None)
+    turns_submitted: int = 0       # every dispatched turn; the zero-hung
+    #                                invariant is turns_submitted ==
+    #                                requests_done
+    ttft_p99: float = 0.0          # virtual seconds (chaos-table metric)
+    retries: int = 0               # transient errors absorbed by retry
+    io_errors: int = 0             # ops that exhausted the retry budget
+    integrity_failures: int = 0    # corrupt payloads caught by checksum
+    fetch_recomputes: int = 0      # failed fetches converted to recompute
+    retry_delay_s: float = 0.0     # modelled backoff charged to the clock
+    tier_health: Dict[int, str] = field(default_factory=dict)
+    injected: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -284,6 +312,7 @@ class ClusterReplayResult:
     steady_ttft_p95: float = 0.0    # turns elsewhere, never redispatched
     warmed_blocks: int = 0
     warmed_sessions: int = 0
+    ttft_p99: float = 0.0
 
 
 @dataclass
@@ -365,6 +394,16 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
     hot = rcfg.hot_blocks if rcfg.hot_blocks is not None else hot
     t1 = rcfg.t1_blocks if rcfg.t1_blocks is not None else t1
     specs = replay_tier_specs(cfg, hot_blocks=hot, t1_blocks=t1)
+    if rcfg.t2_blocks is not None or rcfg.t3_blocks is not None:
+        bb = sizing.block_bytes(cfg)
+        specs = list(specs)
+        if rcfg.t2_blocks is not None:
+            specs[2] = dataclasses.replace(specs[2],
+                                           capacity=rcfg.t2_blocks * bb)
+        if rcfg.t3_blocks is not None:
+            specs[3] = dataclasses.replace(specs[3],
+                                           capacity=rcfg.t3_blocks * bb)
+        specs = tuple(specs)
     ecfg = EngineConfig(
         max_len=max_len,
         kv_budget_bytes=rcfg.n_slots * sizing.seq_bytes(cfg, max_len),
@@ -380,7 +419,11 @@ def build_engine(rcfg: ServingReplayConfig, cfg: Optional[ModelConfig] = None,
         max_step_tokens=rcfg.max_step_tokens,
         kernel_backend=rcfg.kernel_backend,
         fused_step=rcfg.fused_step,
-        segment_reuse=rcfg.segment_reuse)
+        segment_reuse=rcfg.segment_reuse,
+        fault_injector=(FaultInjector(dict(rcfg.fault_profiles),
+                                      seed=rcfg.fault_seed)
+                        if rcfg.fault_profiles else None),
+        transfer_timeout_s=rcfg.transfer_timeout_s)
     return ServingEngine(cfg, ecfg)
 
 
@@ -420,17 +463,39 @@ class _FetchStallModel:
 
     def snapshot(self, engine: ServingEngine) -> tuple:
         st = engine.manager.stats
+        hy = engine.manager.hierarchy
+        inj = hy.fault_injector
+        bo = (dict(inj.read_brownouts_by_tier) if inj is not None else {})
         return (st.fetch_time, st.recompute_time, st.promotions,
-                dict(st.tier_hits))
+                dict(st.tier_hits), hy.counters.retry_delay_s, bo)
+
+    def _fault_stall(self, engine: ServingEngine, rd0: float,
+                     bo0: dict) -> float:
+        """Virtual seconds of injected-fault latency this step: retry
+        backoff delays (modelled, accumulated by ``run_io``) plus the
+        brownout inflation of demand-fetch transfers — each read
+        brownout turns one tier fetch into ``mult`` fetches' worth of
+        stall at the target model's block bytes."""
+        hy = engine.manager.hierarchy
+        stall = hy.counters.retry_delay_s - rd0
+        inj = hy.fault_injector
+        if inj is not None:
+            for tid, n in inj.read_brownouts_by_tier.items():
+                d = n - bo0.get(tid, 0)
+                if d > 0:
+                    mult = inj.profiles[tid].brownout_latency_mult
+                    stall += d * (mult - 1.0) * self.tier_stall_s[tid]
+        return stall
 
     def charge(self, engine: ServingEngine, snap: tuple) -> float:
-        f0, r0, p0, th0 = snap
+        f0, r0, p0, th0, rd0, bo0 = snap
         st = engine.manager.stats
+        fault_s = self._fault_stall(engine, rd0, bo0)
         if self.mode == "fixed":
-            return (self.fixed_s * (st.promotions - p0)
+            return (fault_s + self.fixed_s * (st.promotions - p0)
                     + self.weight * ((st.fetch_time - f0)
                                      + (st.recompute_time - r0)))
-        stall = self.weight * (st.recompute_time - r0)
+        stall = fault_s + self.weight * (st.recompute_time - r0)
         for tier, n in st.tier_hits.items():
             if tier in self.hot_tiers:
                 continue
@@ -621,6 +686,7 @@ def _latency_rollup(core: _ReplayCore) -> dict:
     return dict(
         requests_done=len(done), generated_tokens=gen,
         ttft_p50=_percentile(ttfts, 0.50), ttft_p95=_percentile(ttfts, 0.95),
+        ttft_p99=_percentile(ttfts, 0.99),
         tbt_p50=_percentile(tbts, 0.50), tbt_p95=_percentile(tbts, 0.95),
         throughput_tok_s=gen / vt if vt > 0 else 0.0,
         virtual_time_s=vt, steps=core.steps, wall_s=core.wall_s)
@@ -647,7 +713,9 @@ def run_serving_replay(rcfg: ServingReplayConfig,
     served = sum(min(t.req.prefix_hit_blocks + t.req.segment_hit_blocks,
                      t.seen_blocks) for t in done)
     seg = sum(min(t.req.segment_hit_blocks, t.seen_blocks) for t in done)
+    eng.manager.sync_fault_stats()
     mst = eng.manager.stats
+    hy = eng.manager.hierarchy
     lat = _latency_rollup(core)
     return ServingReplayResult(
         workload=rcfg.workload, policy=rcfg.policy,
@@ -664,7 +732,15 @@ def run_serving_replay(rcfg: ServingReplayConfig,
         segment_share_hits=eng.segment_share_hits,
         segment_inject_hits=eng.segment_inject_hits,
         segment_lookups=mst.segment_lookups,
-        segment_lookup_s=mst.segment_lookup_time, **lat)
+        segment_lookup_s=mst.segment_lookup_time,
+        turns_submitted=len(core.tracked),
+        retries=mst.retries, io_errors=mst.io_errors,
+        integrity_failures=mst.integrity_failures,
+        fetch_recomputes=mst.fetch_recomputes,
+        retry_delay_s=hy.counters.retry_delay_s,
+        tier_health=dict(mst.tier_health),
+        injected=(hy.fault_injector.stats()
+                  if hy.fault_injector is not None else {}), **lat)
 
 
 def run_cluster_replay(rcfg: ClusterReplayConfig,
